@@ -1,0 +1,21 @@
+"""Shared helpers for benchmarks (homogeneous random graph builder)."""
+import numpy as np
+
+from repro.core.graph_tensor import (Adjacency, Context, EdgeSet,
+                                     GraphTensor, NodeSet)
+
+
+def make_random_graph(n_nodes: int, n_edges: int, dim: int, seed: int = 0
+                      ) -> GraphTensor:
+    rng = np.random.default_rng(seed)
+    return GraphTensor(
+        context=Context(np.asarray([1], np.int32), {}),
+        node_sets={"nodes": NodeSet(
+            np.asarray([n_nodes], np.int32),
+            {"h": rng.normal(size=(n_nodes, dim)).astype(np.float32)},
+            n_nodes)},
+        edge_sets={"edges": EdgeSet(
+            np.asarray([n_edges], np.int32),
+            Adjacency(rng.integers(0, n_nodes, n_edges).astype(np.int32),
+                      rng.integers(0, n_nodes, n_edges).astype(np.int32),
+                      "nodes", "nodes"), {}, n_edges)})

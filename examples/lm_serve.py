@@ -1,0 +1,46 @@
+"""Serve a small LM with batched requests through the continuous-batching
+engine (prefill + fused decode ticks + slot recycling).
+
+    PYTHONPATH=src python examples/lm_serve.py --arch rwkv6-3b-smoke
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models.registry import build_model, get_config
+from repro.nn.module import split_params
+from repro.serve.engine import Request, ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen1.5-4b-smoke")
+ap.add_argument("--requests", type=int, default=6)
+ap.add_argument("--new-tokens", type=int, default=16)
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+model = build_model(cfg)
+params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+engine = ServeEngine(cfg, params, n_slots=4, max_len=128)
+
+rng = np.random.default_rng(0)
+prompt_len = 12
+reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, prompt_len)
+                .astype(np.int32),
+                max_new_tokens=args.new_tokens,
+                temperature=0.0 if i % 2 == 0 else 0.8)
+        for i in range(args.requests)]
+
+t0 = time.time()
+done = engine.run(reqs)
+dt = time.time() - t0
+total_new = sum(len(r.generated) for r in done)
+print(f"served {len(done)} requests, {total_new} tokens "
+      f"in {dt:.2f}s ({total_new / dt:.1f} tok/s on 1 CPU)")
+for i, r in enumerate(done[:3]):
+    print(f"req{i}: prompt={r.prompt[:6].tolist()}... "
+          f"generated={r.generated[:8]}...")
+assert all(r.done for r in done)
+assert all(len(r.generated) >= args.new_tokens for r in done)
+print("lm_serve OK")

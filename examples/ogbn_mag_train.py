@@ -1,0 +1,126 @@
+"""End-to-end driver — the paper's §8 OGBN-MAG case study, soup to nuts:
+
+  schema -> SamplingSpecBuilder (Fig. 6) -> distributed sampler (Alg. 1,
+  persisted shards) -> GraphBatcher (merge+pad) -> 4-round MPNN (Fig. 7/8)
+  -> RootNodeMulticlassClassification -> runner.run with checkpointing.
+
+Uses the synthetic-MAG generator (OGB download unavailable offline); the
+planted signal makes neighborhood aggregation necessary, so the experiment
+is qualitatively faithful to Table 1.
+
+    PYTHONPATH=src python examples/ogbn_mag_train.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core import HIDDEN_STATE, mag_schema
+from repro.core.models import vanilla_mpnn
+from repro.data import (GraphBatcher, SamplingSpecBuilder,
+                        distributed_sample, find_size_constraints,
+                        load_graphs)
+from repro.data.synthetic import synthetic_mag
+from repro.nn.layers import Embedding, Linear
+from repro.nn.module import Module
+from repro.orchestration import RootNodeMulticlassClassification, run
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--papers", type=int, default=1200)
+ap.add_argument("--epochs", type=int, default=4)
+ap.add_argument("--hidden", type=int, default=64)
+args = ap.parse_args()
+
+# 1. problem identification + schema (paper §8.1)
+schema = mag_schema()
+store, labels = synthetic_mag(n_papers=args.papers,
+                              n_authors=args.papers // 2,
+                              n_institutions=40, n_fields=80,
+                              n_classes=8, feat_dim=32)
+
+# 2. sampling spec (paper Fig. 6) + distributed sampling (§8.2)
+b = SamplingSpecBuilder(schema)
+seed_op = b.seed("paper")
+cited = seed_op.sample(8, "cites")
+authors = cited.join([seed_op]).sample(4, "written")
+author_papers = authors.sample(4, "writes")
+authors.sample(4, "affiliated_with")
+author_papers.join([seed_op, cited]).sample(4, "has_topic")
+spec = seed_op.build()
+print("sampling ops:", [op.op_name for op in spec.sampling_ops])
+
+with tempfile.TemporaryDirectory() as tmp:
+    n_train = int(args.papers * 0.75)
+    shards = distributed_sample(store, spec, range(args.papers), tmp,
+                                num_shards=4)
+    graphs = [g for p in shards for g in load_graphs(p)]
+print(f"sampled {len(graphs)} rooted subgraphs via 4 shard workers")
+train_graphs = graphs[:n_train]
+test_graphs = graphs[n_train:]
+
+# 3. modeling (paper §8.3: 4-round MPNN over all five edge sets)
+dim = args.hidden
+edges = {name: (es.source, es.target)
+         for name, es in schema.edge_sets.items()}
+node_dims = {n: dim for n in schema.node_sets}
+
+
+class InitStates(Module):
+    """MapFeatures analogue: paper features -> uniform hidden states;
+    id-embedding tables for institutions/fields (paper §8.1)."""
+
+    def __init__(self):
+        self.paper = Linear(32, dim)
+        self.tables = {n: Embedding(4096, dim)
+                       for n in ("author", "institution", "field_of_study")}
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        p = {"paper": self.paper.init(ks[0])}
+        for i, (n, t) in enumerate(sorted(self.tables.items())):
+            p[n] = t.init(ks[i + 1])
+        return p
+
+    def __call__(self, params, graph):
+        ns = {"paper": {HIDDEN_STATE: jax.nn.relu(self.paper(
+            params["paper"], graph.node_sets["paper"]["feat"]))}}
+        for n, t in self.tables.items():
+            ids = graph.node_sets[n]["id"] % 4096
+            ns[n] = {HIDDEN_STATE: t(params[n], ids,
+                                     dtype=jax.numpy.float32)}
+        return graph.replace_features(node_sets=ns)
+
+
+gnn = vanilla_mpnn(edges, node_dims, message_dim=dim, hidden_dim=dim,
+                   num_rounds=4, use_layer_norm=True)
+
+# 4. orchestration (paper §8.4)
+bs = 16
+sizes = find_size_constraints(graphs, bs)
+task = RootNodeMulticlassClassification("paper", 8, dim)
+
+
+def batches_for(gs):
+    batcher = GraphBatcher(gs, bs, sizes, seed=0)
+
+    def gen(epoch):
+        for graph in batcher.epoch(epoch % 5):
+            arr = np.asarray(graph.node_sets["paper"].sizes)
+            lab = np.asarray(graph.node_sets["paper"]["labels"])
+            starts = np.concatenate([[0], np.cumsum(arr)[:-1]])
+            yield graph, lab[np.minimum(starts, len(lab) - 1)].astype(
+                np.int32)
+
+    return gen
+
+
+result = run(train_batches=batches_for(train_graphs),
+             model_fn=lambda: (InitStates(), gnn), task=task,
+             epochs=args.epochs, learning_rate=3e-3, total_steps=600,
+             eval_batches=lambda: batches_for(test_graphs)(0),
+             ckpt_dir="", log_every=20)
+print(f"final loss {result.train_loss:.4f}  "
+      f"test accuracy {result.metrics['eval_accuracy']:.4f}")
+assert result.metrics["eval_accuracy"] > 0.5
+print("ogbn_mag_train OK")

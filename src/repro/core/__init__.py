@@ -1,0 +1,27 @@
+"""repro.core — the TF-GNN data model + modeling API in JAX.
+
+API levels (paper Fig. 1):
+  L1 data:      GraphSchema, GraphTensor (+ repro.data batching/padding)
+  L2 exchange:  broadcast_*/pool_*/segment_softmax (repro.core.ops)
+  L3 modeling:  Conv classes, GraphUpdate, model zoo
+  L4 orchestration: repro.orchestration.runner
+"""
+from repro.core.graph_tensor import (Adjacency, Context, EdgeSet,  # noqa
+                                     GraphTensor, NodeSet, CONTEXT,
+                                     HIDDEN_STATE, SOURCE, TARGET)
+from repro.core.schema import (FeatureSpec, GraphSchema, NodeSetSpec,  # noqa
+                               EdgeSetSpec, mag_schema, recsys_schema)
+from repro.core import ops  # noqa
+from repro.core.ops import (broadcast_node_to_edges, pool_edges_to_node,  # noqa
+                            broadcast_context_to_nodes,
+                            broadcast_context_to_edges,
+                            pool_nodes_to_context, pool_edges_to_context,
+                            segment_softmax, node_degree, use_kernels)
+from repro.core.convolutions import (AnyToAnyConv, GATv2Conv, GCNConv,  # noqa
+                                     MultiHeadAttentionConv, SAGEConv,
+                                     SimpleConv)
+from repro.core.graph_update import (ContextUpdate, EdgeSetUpdate,  # noqa
+                                     GraphUpdate, MapFeatures,
+                                     NextStateFromConcat, NodeSetUpdate,
+                                     ResidualNextState, SingleInputNextState)
+from repro.core import models  # noqa

@@ -1,0 +1,209 @@
+"""GraphTensor — the paper's §3.2 data structure, adapted to JAX/TPU.
+
+Hardware adaptation (see DESIGN.md §2): XLA requires static shapes, so the
+jit-visible GraphTensor is always *fixed-capacity*: every node/edge set has a
+static capacity (array length) and a dynamic `sizes` vector giving the valid
+item count per graph component.  Ragged data lives at the host/data-pipeline
+layer (numpy lists); `repro.data.batching` merges and pads into this form —
+exactly the paper's "padding graph + weight 0" recipe for Cloud TPUs.
+
+Registered as a pytree: feature dicts / sizes / adjacency are leaves, all
+names are static aux data, so GraphTensors pass through jit/grad/vmap/scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+def _freeze(d: Mapping) -> dict:
+    return dict(sorted(d.items()))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Context:
+    """Per-component features. sizes[c] == 1 for real components, 0 for
+    padding components (doubles as the training-weight mask)."""
+
+    sizes: Array                      # [C] int32 (1 = real, 0 = padding)
+    features: dict[str, Array]        # each [C, ...]
+
+    def tree_flatten(self):
+        feats = _freeze(self.features)
+        return (self.sizes, tuple(feats.values())), tuple(feats.keys())
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        sizes, feats = children[0], children[1]
+        return cls(sizes, dict(zip(keys, feats)))
+
+    @property
+    def num_components(self) -> int:
+        return self.sizes.shape[0]
+
+    def __getitem__(self, name: str) -> Array:
+        return self.features[name]
+
+    def mask(self) -> Array:
+        return self.sizes > 0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NodeSet:
+    sizes: Array                      # [C] int32 — valid nodes per component
+    features: dict[str, Array]        # each [capacity, ...]
+    capacity: int                     # static array length
+
+    def tree_flatten(self):
+        feats = _freeze(self.features)
+        return ((self.sizes, tuple(feats.values())),
+                (tuple(feats.keys()), self.capacity))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, capacity = aux
+        sizes, feats = children
+        return cls(sizes, dict(zip(keys, feats)), capacity)
+
+    @property
+    def total_size(self) -> Array:
+        return self.sizes.sum()
+
+    def __getitem__(self, name: str) -> Array:
+        return self.features[name]
+
+    def mask(self) -> Array:
+        """[capacity] bool — True for valid (non-padding) nodes."""
+        return jnp.arange(self.capacity) < self.total_size
+
+    def component_ids(self) -> Array:
+        """[capacity] int32 — component index per node (jit-safe)."""
+        bounds = jnp.cumsum(self.sizes)
+        return jnp.searchsorted(bounds, jnp.arange(self.capacity),
+                                side="right").astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Adjacency:
+    source: Array                     # [capacity] int32 node indices
+    target: Array                     # [capacity] int32 node indices
+    source_name: str
+    target_name: str
+
+    def tree_flatten(self):
+        return ((self.source, self.target),
+                (self.source_name, self.target_name))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EdgeSet:
+    sizes: Array                      # [C] int32 — valid edges per component
+    adjacency: Adjacency
+    features: dict[str, Array]
+    capacity: int
+
+    def tree_flatten(self):
+        feats = _freeze(self.features)
+        return ((self.sizes, self.adjacency, tuple(feats.values())),
+                (tuple(feats.keys()), self.capacity))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, capacity = aux
+        sizes, adjacency, feats = children
+        return cls(sizes, adjacency, dict(zip(keys, feats)), capacity)
+
+    @property
+    def total_size(self) -> Array:
+        return self.sizes.sum()
+
+    def __getitem__(self, name: str) -> Array:
+        return self.features[name]
+
+    def mask(self) -> Array:
+        return jnp.arange(self.capacity) < self.total_size
+
+    def component_ids(self) -> Array:
+        bounds = jnp.cumsum(self.sizes)
+        return jnp.searchsorted(bounds, jnp.arange(self.capacity),
+                                side="right").astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphTensor:
+    """A scalar GraphTensor (shape []) holding one merged batch of graphs
+    as components — the paper's canonical in-model representation."""
+
+    context: Context
+    node_sets: dict[str, NodeSet]
+    edge_sets: dict[str, EdgeSet]
+
+    def tree_flatten(self):
+        ns = _freeze(self.node_sets)
+        es = _freeze(self.edge_sets)
+        return ((self.context, tuple(ns.values()), tuple(es.values())),
+                (tuple(ns.keys()), tuple(es.keys())))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        nkeys, ekeys = aux
+        context, nvals, evals = children
+        return cls(context, dict(zip(nkeys, nvals)), dict(zip(ekeys, evals)))
+
+    # -- conveniences -------------------------------------------------------
+
+    @property
+    def num_components(self) -> int:
+        return self.context.num_components
+
+    def replace_features(
+            self,
+            context: Optional[Mapping[str, Array]] = None,
+            node_sets: Optional[Mapping[str, Mapping[str, Array]]] = None,
+            edge_sets: Optional[Mapping[str, Mapping[str, Array]]] = None,
+    ) -> "GraphTensor":
+        """New GraphTensor with some feature dicts replaced (paper §3.2)."""
+        new_ctx = self.context
+        if context is not None:
+            new_ctx = Context(self.context.sizes, dict(context))
+        new_ns = dict(self.node_sets)
+        for name, feats in (node_sets or {}).items():
+            old = new_ns[name]
+            new_ns[name] = NodeSet(old.sizes, dict(feats), old.capacity)
+        new_es = dict(self.edge_sets)
+        for name, feats in (edge_sets or {}).items():
+            old = new_es[name]
+            new_es[name] = EdgeSet(old.sizes, old.adjacency, dict(feats),
+                                   old.capacity)
+        return GraphTensor(new_ctx, new_ns, new_es)
+
+    @classmethod
+    def from_pieces(cls, context: Context | None = None,
+                    node_sets: Mapping[str, NodeSet] | None = None,
+                    edge_sets: Mapping[str, EdgeSet] | None = None
+                    ) -> "GraphTensor":
+        node_sets = dict(node_sets or {})
+        edge_sets = dict(edge_sets or {})
+        if context is None:
+            context = Context(jnp.ones((1,), jnp.int32), {})
+        return cls(context, node_sets, edge_sets)
+
+
+HIDDEN_STATE = "hidden_state"
+SOURCE = "source"
+TARGET = "target"
+CONTEXT = "context"

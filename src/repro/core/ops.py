@@ -1,0 +1,238 @@
+"""Data-exchange ops (paper §4.1, API Level 2).
+
+Broadcast and pool between node sets, edge sets and context.  All ops work
+on the fixed-capacity GraphTensor: padding items are masked out of every
+reduction, so results over valid items match the ragged semantics of the
+paper exactly (tested in tests/test_ops.py against a dense-adjacency
+oracle).
+
+Index-based exchange (gather/segment ops) is the paper's core design choice
+vs. adjacency matmuls; the Pallas kernels in repro.kernels provide the
+TPU-tuned fused path, enabled via `use_kernels(True)` or the REPRO_KERNELS
+env var (the jnp path remains the reference oracle).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_tensor import (CONTEXT, GraphTensor, HIDDEN_STATE,
+                                     SOURCE, TARGET)
+
+_KERNELS_ENABLED = os.environ.get("REPRO_KERNELS", "0") == "1"
+
+
+def use_kernels(enabled: bool) -> None:
+    global _KERNELS_ENABLED
+    _KERNELS_ENABLED = enabled
+
+
+def kernels_enabled() -> bool:
+    return _KERNELS_ENABLED
+
+
+def _edge_endpoint(graph: GraphTensor, edge_set_name: str, tag: str):
+    es = graph.edge_sets[edge_set_name]
+    adj = es.adjacency
+    if tag == SOURCE:
+        return adj.source, adj.source_name
+    if tag == TARGET:
+        return adj.target, adj.target_name
+    raise ValueError(f"tag must be SOURCE or TARGET, got {tag!r}")
+
+
+def _resolve_feature(piece, feature_name, feature_value):
+    if (feature_name is None) == (feature_value is None):
+        raise ValueError("exactly one of feature_name/feature_value required")
+    return piece[feature_name] if feature_name is not None else feature_value
+
+
+# ---------------------------------------------------------------------------
+# node <-> edge
+# ---------------------------------------------------------------------------
+
+def broadcast_node_to_edges(graph: GraphTensor, edge_set_name: str, tag: str,
+                            *, feature_name: str | None = None,
+                            feature_value=None):
+    """For each edge, the feature value at its `tag` endpoint node."""
+    idx, node_set_name = _edge_endpoint(graph, edge_set_name, tag)
+    value = _resolve_feature(graph.node_sets[node_set_name], feature_name,
+                             feature_value)
+    return jnp.take(value, idx, axis=0)
+
+
+_SEGMENT_REDUCERS = {
+    "sum": jax.ops.segment_sum,
+    "mean": None,  # sum / count
+    "max": jax.ops.segment_max,
+    "min": jax.ops.segment_min,
+    "prod": jax.ops.segment_prod,
+}
+
+_NEUTRAL = {"max": -jnp.inf, "min": jnp.inf}
+
+
+def pool_edges_to_node(graph: GraphTensor, edge_set_name: str, tag: str,
+                       reduce_type: str = "sum", *,
+                       feature_name: str | None = None, feature_value=None):
+    """Aggregate per-edge values at each `tag` endpoint node (paper Eq. 3).
+
+    Padding edges are excluded; for max/min the neutral element is used and
+    nodes with no (valid) incident edges yield 0.
+    """
+    es = graph.edge_sets[edge_set_name]
+    idx, node_set_name = _edge_endpoint(graph, edge_set_name, tag)
+    value = _resolve_feature(es, feature_name, feature_value)
+    num_nodes = graph.node_sets[node_set_name].capacity
+    emask = es.mask()
+    emask_b = emask.reshape(emask.shape + (1,) * (value.ndim - 1))
+
+    if reduce_type in ("sum", "mean"):
+        data = jnp.where(emask_b, value, 0)
+        if _KERNELS_ENABLED and value.ndim == 2 \
+                and jnp.issubdtype(value.dtype, jnp.floating):
+            from repro.kernels.segment_pool import ops as seg_ops
+            pooled = seg_ops.segment_sum(data, idx, num_nodes)
+        else:
+            pooled = jax.ops.segment_sum(data, idx, num_segments=num_nodes)
+        if reduce_type == "mean":
+            cnt = jax.ops.segment_sum(emask.astype(value.dtype), idx,
+                                      num_segments=num_nodes)
+            shape = cnt.shape + (1,) * (value.ndim - 1)
+            pooled = pooled / jnp.maximum(cnt, 1).reshape(shape)
+        return pooled
+    if reduce_type in ("max", "min"):
+        neutral = _NEUTRAL[reduce_type]
+        data = jnp.where(emask_b, value, neutral)
+        fn = _SEGMENT_REDUCERS[reduce_type]
+        pooled = fn(data, idx, num_segments=num_nodes)
+        return jnp.where(jnp.isfinite(pooled), pooled, 0)
+    raise ValueError(f"unknown reduce_type {reduce_type!r}")
+
+
+def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
+                    *, feature_value):
+    """Softmax of per-edge scores within each receiver node's edge segment
+    (the attention-pooling primitive used by GATv2/transformer convs)."""
+    es = graph.edge_sets[edge_set_name]
+    idx, node_set_name = _edge_endpoint(graph, edge_set_name, tag)
+    num_nodes = graph.node_sets[node_set_name].capacity
+    emask = es.mask()
+    emask_b = emask.reshape(emask.shape + (1,) * (feature_value.ndim - 1))
+    scores = jnp.where(emask_b, feature_value, -jnp.inf)
+    if _KERNELS_ENABLED and scores.ndim == 2 \
+            and jnp.issubdtype(scores.dtype, jnp.floating):
+        # fused path: segment max + exp-sum via the Pallas segment kernel
+        from repro.kernels.segment_pool import ops as seg_ops
+        kidx = jnp.where(emask, idx, num_nodes)
+        seg_max = seg_ops.segment_max(
+            jnp.where(emask_b, scores, 0), kidx, num_nodes)
+        seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0)
+        shifted = jnp.where(emask_b,
+                            scores - jnp.take(seg_max, idx, axis=0), -jnp.inf)
+        exp = jnp.where(emask_b, jnp.exp(shifted), 0)
+        seg_sum = seg_ops.segment_sum(exp, kidx, num_nodes)
+        denom = jnp.take(seg_sum, idx, axis=0)
+        return exp / jnp.maximum(denom, 1e-37)
+    seg_max = jax.ops.segment_max(scores, idx, num_segments=num_nodes)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0)
+    shifted = jnp.where(emask_b, scores - jnp.take(seg_max, idx, axis=0),
+                        -jnp.inf)
+    exp = jnp.where(emask_b, jnp.exp(shifted), 0)
+    seg_sum = jax.ops.segment_sum(exp, idx, num_segments=num_nodes)
+    denom = jnp.take(seg_sum, idx, axis=0)
+    return exp / jnp.maximum(denom, 1e-37)
+
+
+# ---------------------------------------------------------------------------
+# context <-> node/edge
+# ---------------------------------------------------------------------------
+
+def _piece(graph: GraphTensor, name: str, node_or_edge: str):
+    return (graph.node_sets[name] if node_or_edge == "node"
+            else graph.edge_sets[name])
+
+
+def broadcast_context_to_nodes(graph: GraphTensor, node_set_name: str, *,
+                               feature_name: str | None = None,
+                               feature_value=None):
+    value = _resolve_feature(graph.context, feature_name, feature_value)
+    comp = graph.node_sets[node_set_name].component_ids()
+    return jnp.take(value, jnp.minimum(comp, value.shape[0] - 1), axis=0)
+
+
+def broadcast_context_to_edges(graph: GraphTensor, edge_set_name: str, *,
+                               feature_name: str | None = None,
+                               feature_value=None):
+    value = _resolve_feature(graph.context, feature_name, feature_value)
+    comp = graph.edge_sets[edge_set_name].component_ids()
+    return jnp.take(value, jnp.minimum(comp, value.shape[0] - 1), axis=0)
+
+
+def pool_nodes_to_context(graph: GraphTensor, node_set_name: str,
+                          reduce_type: str = "sum", *,
+                          feature_name: str | None = None,
+                          feature_value=None):
+    """Aggregate node values per graph component."""
+    ns = graph.node_sets[node_set_name]
+    value = _resolve_feature(ns, feature_name, feature_value)
+    comp = ns.component_ids()
+    c = graph.num_components
+    mask = ns.mask()
+    mask_b = mask.reshape(mask.shape + (1,) * (value.ndim - 1))
+    comp = jnp.where(mask, comp, c)  # padding -> overflow bucket
+    if reduce_type in ("sum", "mean"):
+        pooled = jax.ops.segment_sum(jnp.where(mask_b, value, 0), comp,
+                                     num_segments=c + 1)[:c]
+        if reduce_type == "mean":
+            cnt = jax.ops.segment_sum(mask.astype(value.dtype), comp,
+                                      num_segments=c + 1)[:c]
+            shape = cnt.shape + (1,) * (value.ndim - 1)
+            pooled = pooled / jnp.maximum(cnt, 1).reshape(shape)
+        return pooled
+    if reduce_type in ("max", "min"):
+        neutral = _NEUTRAL[reduce_type]
+        fn = _SEGMENT_REDUCERS[reduce_type]
+        pooled = fn(jnp.where(mask_b, value, neutral), comp,
+                    num_segments=c + 1)[:c]
+        return jnp.where(jnp.isfinite(pooled), pooled, 0)
+    raise ValueError(reduce_type)
+
+
+def pool_edges_to_context(graph: GraphTensor, edge_set_name: str,
+                          reduce_type: str = "sum", *,
+                          feature_name: str | None = None,
+                          feature_value=None):
+    es = graph.edge_sets[edge_set_name]
+    value = _resolve_feature(es, feature_name, feature_value)
+    comp = es.component_ids()
+    c = graph.num_components
+    mask = es.mask()
+    mask_b = mask.reshape(mask.shape + (1,) * (value.ndim - 1))
+    comp = jnp.where(mask, comp, c)
+    if reduce_type in ("sum", "mean"):
+        pooled = jax.ops.segment_sum(jnp.where(mask_b, value, 0), comp,
+                                     num_segments=c + 1)[:c]
+        if reduce_type == "mean":
+            cnt = jax.ops.segment_sum(mask.astype(value.dtype), comp,
+                                      num_segments=c + 1)[:c]
+            shape = cnt.shape + (1,) * (value.ndim - 1)
+            pooled = pooled / jnp.maximum(cnt, 1).reshape(shape)
+        return pooled
+    neutral = _NEUTRAL[reduce_type]
+    fn = _SEGMENT_REDUCERS[reduce_type]
+    pooled = fn(jnp.where(mask_b, value, neutral), comp,
+                num_segments=c + 1)[:c]
+    return jnp.where(jnp.isfinite(pooled), pooled, 0)
+
+
+def node_degree(graph: GraphTensor, edge_set_name: str, tag: str):
+    """Valid-edge degree of each node at endpoint `tag`."""
+    es = graph.edge_sets[edge_set_name]
+    idx, node_set_name = _edge_endpoint(graph, edge_set_name, tag)
+    num_nodes = graph.node_sets[node_set_name].capacity
+    return jax.ops.segment_sum(es.mask().astype(jnp.int32), idx,
+                               num_segments=num_nodes)

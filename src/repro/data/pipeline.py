@@ -1,0 +1,81 @@
+"""Input pipeline: sampled graphs -> merged+padded fixed-shape batches.
+
+The `GraphBatcher` is the tf.data analogue: shuffling, batching, merging,
+padding, per-data-parallel-rank sharding, and background prefetch (a thread
++ queue — the 'distributed input processing' of paper §6.2.1 scaled down to
+one host; the rank/world interface is what a tf.data-service-style fleet
+would implement).  Deterministic: (seed, epoch, step) -> batch, which is
+what checkpoint/restart uses to skip ahead (exactly-once sample replay).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph_tensor import GraphTensor
+from repro.data.batching import SizeConstraints, merge_graphs, pad_to_sizes
+
+
+class GraphBatcher:
+    def __init__(self, graphs: Sequence[GraphTensor], batch_size: int,
+                 sizes: SizeConstraints, *, seed: int = 0,
+                 rank: int = 0, world: int = 1, drop_remainder: bool = True):
+        self.graphs = list(graphs)
+        self.batch_size = batch_size
+        self.sizes = sizes
+        self.seed = seed
+        self.rank = rank
+        self.world = world
+        assert batch_size % world == 0
+        self.per_rank = batch_size // world
+
+    def epoch(self, epoch: int, *, start_step: int = 0
+              ) -> Iterator[GraphTensor]:
+        """Deterministic epoch stream; `start_step` skips ahead (restart)."""
+        rng = np.random.default_rng((self.seed, epoch))
+        order = rng.permutation(len(self.graphs))
+        n_steps = len(order) // self.batch_size
+        for step in range(start_step, n_steps):
+            lo = step * self.batch_size + self.rank * self.per_rank
+            idx = order[lo:lo + self.per_rank]
+            merged = merge_graphs([self.graphs[i] for i in idx])
+            yield pad_to_sizes(merged, self._rank_sizes())
+
+    def _rank_sizes(self) -> SizeConstraints:
+        if self.world == 1:
+            return self.sizes
+        return SizeConstraints(
+            total_num_components=self.per_rank + 1,
+            total_num_nodes={k: max(v // self.world, 8)
+                             for k, v in self.sizes.total_num_nodes.items()},
+            total_num_edges={k: max(v // self.world, 8)
+                             for k, v in self.sizes.total_num_edges.items()})
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Background-thread prefetch (host-side pipelining)."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = object()
+    err: list[BaseException] = []
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        except BaseException as e:  # noqa: BLE001
+            err.append(e)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            if err:
+                raise err[0]
+            return
+        yield item

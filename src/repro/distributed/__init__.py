@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingContext, current_context, logical_to_spec, param_shardings,
+    shard_activation, use_sharding,
+)

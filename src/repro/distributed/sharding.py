@@ -1,0 +1,194 @@
+"""Logical-axis sharding: one rule table maps model-declared axis names to
+mesh axes, separately for parameters (FSDP-style) and activations.
+
+Models annotate params with logical axes at init (see repro.nn.module.Param)
+and call :func:`shard_activation` at block boundaries.  Outside a sharding
+context both are no-ops, so CPU unit tests never touch device placement.
+
+Mesh axes (production): ("pod", "data", "model") or ("data", "model").
+Logical axes used across the codebase:
+
+  batch     -> DP over ("pod", "data")
+  embed     -> FSDP: params sharded over "data" (ZeRO-3); activations unsharded
+  heads / kv_heads / mlp / vocab / expert -> TP/EP over "model"
+  seq       -> SP over "model" for long-context decode states (opt-in)
+  layers    -> stacked-scan leading dim; unsharded (or PP stage axis)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+# Default rule tables.  Values may be a mesh axis name, a tuple of mesh axes,
+# or None (replicate).
+DEFAULT_PARAM_RULES: dict[str, Any] = {
+    "batch": None,
+    "moe_group": None,
+    "embed": "data",        # FSDP / ZeRO-3: gather at use
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+    "seq": None,
+}
+
+DEFAULT_ACT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "moe_group": "data",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "seq": None,
+    "layers": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    param_rules: Mapping[str, Any]
+    act_rules: Mapping[str, Any]
+
+    def resolve(self, axes: Sequence[Any], rules: Mapping[str, Any],
+                shape: Sequence[int] | None = None) -> P:
+        """Greedy left-to-right resolution.
+
+        When `shape` is given (pjit argument boundary), mesh axes are only
+        assigned to dims they divide evenly (jax requires divisibility for
+        arg shardings; intermediates may be uneven).  Each mesh axis is used
+        at most once per spec.
+        """
+        mesh_axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used: set[str] = set()
+        out = []
+        for i, ax in enumerate(axes):
+            target = rules.get(ax) if ax is not None else None
+            if target is None:
+                out.append(None)
+                continue
+            cand = tuple(target) if isinstance(target, (tuple, list)) \
+                else (target,)
+            cand = tuple(t for t in cand if t in mesh_axes and t not in used)
+            if not cand:
+                out.append(None)
+                continue
+            if shape is not None:
+                size = 1
+                for t in cand:
+                    size *= mesh_axes[t]
+                if shape[i] % size != 0:
+                    # try single-axis fallbacks before replicating
+                    single = next((t for t in cand
+                                   if shape[i] % mesh_axes[t] == 0), None)
+                    if single is None:
+                        out.append(None)
+                        continue
+                    cand = (single,)
+            used.update(cand)
+            out.append(cand if len(cand) > 1 else cand[0])
+        return P(*out)
+
+
+def current_context() -> ShardingContext | None:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, param_rules: Mapping[str, Any] | None = None,
+                 act_rules: Mapping[str, Any] | None = None):
+    prev = current_context()
+    _state.ctx = ShardingContext(
+        mesh,
+        dict(DEFAULT_PARAM_RULES, **(param_rules or {})),
+        dict(DEFAULT_ACT_RULES, **(act_rules or {})),
+    )
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = prev
+
+
+def logical_to_spec(axes: Sequence[Any], *, kind: str = "param") -> P:
+    ctx = current_context()
+    if ctx is None:
+        return P()
+    rules = ctx.param_rules if kind == "param" else ctx.act_rules
+    return ctx.resolve(axes, rules)
+
+
+def shard_activation(x, names: Sequence[Any]):
+    """Apply a with_sharding_constraint from logical names; no-op sans ctx."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = ctx.resolve(names, ctx.act_rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf is a PLAIN tuple of axis names (str|None).
+    NamedTuples (pytree containers like KVCache/AdamWState) are NOT leaves."""
+    return (type(x) is tuple
+            and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain_tree(tree, axes_tree, *, kind: str = "param"):
+    """with_sharding_constraint over a whole tree of intermediates (e.g. the
+    gradient accumulator in the microbatch scan — without this GSPMD may
+    replicate scan carries, exploding per-device memory).  No-op outside a
+    sharding context."""
+    ctx = current_context()
+    if ctx is None:
+        return tree
+    rules = ctx.param_rules if kind == "param" else ctx.act_rules
+    flat_axes, _ = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_vals, treedef = jax.tree_util.tree_flatten(tree)
+    assert len(flat_axes) == len(flat_vals), \
+        (len(flat_axes), len(flat_vals))
+    out = [
+        jax.lax.with_sharding_constraint(
+            v, NamedSharding(ctx.mesh, ctx.resolve(a, rules, shape=v.shape)))
+        for v, a in zip(flat_vals, flat_axes)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(axes_tree, *, kind: str = "param", specs_tree=None):
+    """Map a logical-axes tree (plain tuples at leaves) to NamedShardings.
+
+    specs_tree: optional matching tree of ShapeDtypeStructs/arrays — enables
+    the divisibility fixup required at pjit argument boundaries.
+    """
+    ctx = current_context()
+    if ctx is None:
+        raise RuntimeError("param_shardings requires an active use_sharding()")
+    rules = ctx.param_rules if kind == "param" else ctx.act_rules
+
+    if specs_tree is None:
+        to_sharding = lambda axes: NamedSharding(ctx.mesh,
+                                                 ctx.resolve(axes, rules))
+        return jax.tree_util.tree_map(to_sharding, axes_tree,
+                                      is_leaf=is_axes_leaf)
+
+    flat_axes, treedef = jax.tree_util.tree_flatten(axes_tree,
+                                                    is_leaf=is_axes_leaf)
+    flat_specs = jax.tree_util.tree_leaves(specs_tree)
+    assert len(flat_axes) == len(flat_specs), \
+        (len(flat_axes), len(flat_specs))
+    out = [NamedSharding(ctx.mesh, ctx.resolve(a, rules, shape=s.shape))
+           for a, s in zip(flat_axes, flat_specs)]
+    return jax.tree_util.tree_unflatten(treedef, out)

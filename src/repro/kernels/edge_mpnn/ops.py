@@ -1,0 +1,22 @@
+"""jit'd wrapper for the fused edge convolution."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_mpnn import kernel as _k
+from repro.kernels.edge_mpnn.ref import edge_mpnn_ref
+
+MAX_NODES = 4096
+MAX_MSG_DIM = 256
+
+
+def fused_edge_conv(h_src, h_tgt, src, tgt, w, b, *, n_src, n_tgt,
+                    activation: str = "relu"):
+    if (n_src > MAX_NODES or n_tgt > MAX_NODES
+            or w.shape[1] > MAX_MSG_DIM):
+        return edge_mpnn_ref(h_src, h_tgt, src, tgt, w, b, n_src=n_src,
+                             n_tgt=n_tgt, activation=activation)
+    return _k.edge_mpnn(h_src, h_tgt, src, tgt, w, b, n_src=n_src,
+                        n_tgt=n_tgt, activation=activation,
+                        interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused edge_mpnn kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_mpnn_ref(h_src, h_tgt, src, tgt, w, b, *, n_src: int, n_tgt: int,
+                  activation: str = "relu") -> jnp.ndarray:
+    src = src.astype(jnp.int32)
+    tgt = tgt.astype(jnp.int32)
+    valid = tgt < n_tgt
+    hs = jnp.take(h_src, jnp.minimum(src, n_src - 1), axis=0)
+    ht = jnp.take(h_tgt, jnp.minimum(tgt, n_tgt - 1), axis=0)
+    msg = jnp.concatenate([hs, ht], axis=-1) @ w + b
+    if activation == "relu":
+        msg = jnp.maximum(msg, 0)
+    elif activation == "gelu":
+        msg = jax.nn.gelu(msg)
+    msg = jnp.where(valid[:, None], msg, 0)
+    return jax.ops.segment_sum(msg, jnp.where(valid, tgt, n_tgt),
+                               num_segments=n_tgt + 1)[:n_tgt]

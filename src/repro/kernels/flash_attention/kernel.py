@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: causal/bidirectional GQA flash attention.
+
+Online-softmax block attention (Flash-Attention recurrence) with explicit
+BlockSpec VMEM tiling: grid = (batch*kv_heads*q_per_kv, q_blocks,
+kv_blocks); running (m, l, acc) live in VMEM scratch across the sequential
+kv-block grid dim; the output block is written on the last kv step.
+Causal masking skips nothing structurally (TPU grid is static) but the
+per-block mask zeroes the contribution; block-level skipping is the
+documented hillclimb for the XLA path (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  q_block: int, kv_block: int, n_kv_blocks: int,
+                  causal: bool, scale: float):
+    kv_step = pl.program_id(2)
+
+    @pl.when(kv_step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale     # [q_blk, D]
+    k = k_ref[0].astype(jnp.float32)             # [kv_blk, D]
+    v = v_ref[0].astype(jnp.float32)             # [kv_blk, D]
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    if causal:
+        q_idx = (pl.program_id(1) * q_block
+                 + jax.lax.broadcasted_iota(jnp.int32,
+                                            (q_block, kv_block), 0))
+        k_idx = (kv_step * kv_block
+                 + jax.lax.broadcasted_iota(jnp.int32,
+                                            (q_block, kv_block), 1))
+        logits = jnp.where(k_idx <= q_idx, logits, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kv_step == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """q: [B, Sq, H, D]; k, v: [B, Skv, K, D] with H = K * G.
+    Returns [B, Sq, H, D]."""
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    assert sq % q_block == 0 and skv % kv_block == 0
+    scale = d ** -0.5
+
+    # layout: fold heads into the leading grid dim; kv broadcast over G
+    qf = q.transpose(0, 2, 1, 3).reshape(b * kh, g, sq, d)
+    qf = qf.reshape(b * kh * g, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * kh, skv, d),
+                    g, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * kh, skv, d),
+                    g, axis=0)
+    n_q = sq // q_block
+    n_kv = skv // kv_block
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, q_block=q_block, kv_block=kv_block,
+                          n_kv_blocks=n_kv, causal=causal, scale=scale),
+        grid=(b * kh * g, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh * g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return (out.reshape(b, kh, g, sq, d).transpose(0, 3, 1, 2, 4)
+            .reshape(b, sq, h, d))

@@ -1,0 +1,14 @@
+"""jit'd wrapper: Pallas flash attention (interpret off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_block: int = 128, kv_block: int = 128):
+    return _k.flash_attention(q, k, v, causal=causal, q_block=q_block,
+                              kv_block=kv_block,
+                              interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash attention (exact softmax attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, kh, g, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), skv - sq)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

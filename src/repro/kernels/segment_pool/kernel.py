@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: segment reduction (sum/max) over edge values.
+
+The GNN pooling primitive (paper §4.1 pool_edges_to_node), rethought for
+TPU: GPU implementations scatter with atomics (warp-per-row CSR); the TPU
+has no atomics but its grid iterates *sequentially* per core, so we keep
+the [N, D] output accumulator resident in VMEM across edge-block grid steps
+and turn the scatter itself into an MXU matmul:
+
+    out += onehot(seg_ids_block) @ values_block       (sum)
+    out  = max(out, masked-broadcast max)             (max)
+
+One HBM pass over edge values; the one-hot [E_blk, N] never leaves VMEM.
+Constraints: N * D * 4B + E_blk * N * 4B must fit VMEM (default tiles:
+E_blk=256, N <= 4096, D <= 256 — the ops.py wrapper falls back to the jnp
+reference for larger shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _seg_sum_kernel(values_ref, segs_ref, out_ref, *, n_segments: int,
+                    e_block: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = values_ref[...]  # [E_blk, D]
+    segs = segs_ref[...]    # [E_blk, 1] int32 (padding rows -> n_segments)
+    onehot = (segs == jax.lax.broadcasted_iota(
+        jnp.int32, (e_block, n_segments), 1)).astype(vals.dtype)
+    # accumulate in fp32 (out buffer is fp32; cast back in the wrapper)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # [N, D]
+
+
+def _seg_max_kernel(values_ref, segs_ref, out_ref, *, n_segments: int,
+                    e_block: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEG_INF)
+
+    vals = values_ref[...]
+    segs = segs_ref[...]
+    mask = segs == jax.lax.broadcasted_iota(
+        jnp.int32, (e_block, n_segments), 1)  # [E_blk, N]
+    # [E_blk, N, D] masked broadcast, reduced over the edge dim
+    contrib = jnp.where(mask[:, :, None], vals[:, None, :], NEG_INF)
+    out_ref[...] = jnp.maximum(out_ref[...], contrib.max(axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "e_block",
+                                             "reduce", "interpret"))
+def segment_pool(values: jnp.ndarray, seg_ids: jnp.ndarray, *,
+                 n_segments: int, reduce: str = "sum", e_block: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """values: [E, D]; seg_ids: [E] int32 in [0, n_segments) or >= n_segments
+    for padding rows.  Returns [n_segments, D]."""
+    e, d = values.shape
+    pad = (-e) % e_block
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad),
+                          constant_values=n_segments)
+    e_tot = values.shape[0]
+    seg2d = seg_ids.astype(jnp.int32).reshape(-1, 1)
+    kernel = _seg_sum_kernel if reduce == "sum" else _seg_max_kernel
+    acc_dtype = jnp.float32 if reduce == "sum" else values.dtype
+    out = pl.pallas_call(
+        functools.partial(kernel, n_segments=n_segments, e_block=e_block),
+        grid=(e_tot // e_block,),
+        in_specs=[
+            pl.BlockSpec((e_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((e_block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_segments, d), acc_dtype),
+        interpret=interpret,
+    )(values, seg2d)
+    if reduce == "max":
+        out = jnp.where(out <= NEG_INF / 2, 0, out)
+    return out.astype(values.dtype)

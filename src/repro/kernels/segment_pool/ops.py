@@ -1,0 +1,34 @@
+"""jit'd public wrapper for segment_pool: Pallas on TPU, interpret-mode
+Pallas for validation, jnp oracle fallback for out-of-envelope shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_pool import kernel as _k
+from repro.kernels.segment_pool.ref import segment_pool_ref
+
+# VMEM envelope for the one-hot matmul formulation
+MAX_SEGMENTS = 4096
+MAX_FEATURE_DIM = 256
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum(values, seg_ids, n_segments: int):
+    return _dispatch(values, seg_ids, n_segments, "sum")
+
+
+def segment_max(values, seg_ids, n_segments: int):
+    return _dispatch(values, seg_ids, n_segments, "max")
+
+
+def _dispatch(values, seg_ids, n_segments, reduce):
+    if (n_segments > MAX_SEGMENTS or values.shape[-1] > MAX_FEATURE_DIM
+            or values.ndim != 2):
+        return segment_pool_ref(values, seg_ids, n_segments=n_segments,
+                                reduce=reduce)
+    return _k.segment_pool(values, seg_ids, n_segments=n_segments,
+                           reduce=reduce, interpret=not _on_tpu())

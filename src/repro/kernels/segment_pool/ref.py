@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the segment_pool kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_pool_ref(values: jnp.ndarray, seg_ids: jnp.ndarray, *,
+                     n_segments: int, reduce: str = "sum") -> jnp.ndarray:
+    seg_ids = seg_ids.astype(jnp.int32)
+    valid = seg_ids < n_segments
+    if reduce == "sum":
+        return jax.ops.segment_sum(
+            jnp.where(valid[:, None], values, 0),
+            jnp.where(valid, seg_ids, n_segments),
+            num_segments=n_segments + 1)[:n_segments]
+    if reduce == "max":
+        data = jnp.where(valid[:, None], values, -jnp.inf)
+        out = jax.ops.segment_max(data, jnp.where(valid, seg_ids, n_segments),
+                                  num_segments=n_segments + 1)[:n_segments]
+        return jnp.where(jnp.isfinite(out), out, 0)
+    raise ValueError(reduce)

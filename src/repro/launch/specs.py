@@ -1,0 +1,221 @@
+"""ShapeDtypeStruct input specs + step builders for every (arch × shape).
+
+`input_specs(arch, shape)` provides weak-type-correct, shardable stand-ins
+with NO device allocation, for the dry-run `.lower().compile()` path and for
+roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.models.registry import build_model, get_config
+from repro.train.optimizer import AdamW, Adafactor, make_optimizer
+from repro.train.train_loop import make_train_step
+
+S = jax.ShapeDtypeStruct
+
+# decoder sequence fraction for enc-dec training cells (see whisper.py)
+DEC_FRACTION = 4
+WHISPER_DECODE_SELF_LEN = 1024
+
+
+class CellSpec(NamedTuple):
+    """Everything needed to lower one (arch × shape) cell."""
+    cfg: ArchConfig
+    shape: ShapeConfig
+    kind: str                     # train | prefill | decode
+    fn: Callable                  # the step function
+    args: tuple                   # ShapeDtypeStruct pytrees
+    arg_axes: tuple               # logical-axes pytrees (same structure)
+    donate: tuple = ()            # donated argnums
+    rule_overrides: dict = {}     # logical->mesh rule overrides for the cell
+
+
+# Per-cell sharding strategies beyond the defaults (the hillclimb notebook —
+# see EXPERIMENTS.md §Perf for the measured effect of each):
+#   decode cells: "seq" -> "model" (KV/state sequence-parallel, otherwise
+#     replicated KV blows HBM when kv_heads < mesh model dim);
+#   command-r train: "seq" -> "model" (Megatron-style sequence parallelism —
+#     at d_model=12288 the per-device remat carry stack exceeds HBM without
+#     sharding the sequence dim of the residual stream).
+CELL_RULE_OVERRIDES: dict[tuple[str, str], dict] = {
+    ("command-r-plus-104b", "train_4k"): {"seq": "model"},
+    # H1 (EXPERIMENTS.md §Perf): Megatron-SP residual sharding for the
+    # collective-bound zamba cells (-49% collective bytes train; -3 GiB
+    # temp prefill)
+    ("zamba2-1.2b", "train_4k"): {"seq": "model"},
+    ("zamba2-1.2b", "prefill_32k"): {"seq": "model"},
+}
+
+
+def pick_optimizer(cfg: ArchConfig):
+    """Optimizer policy by model scale (distributed-memory trick):
+    <20B: AdamW fp32 moments; 20-100B: AdamW bf16 moments; >=100B: Adafactor
+    (factored second moment) — keeps optimizer bytes/chip inside v5e HBM."""
+    n = cfg.param_count_estimate()
+    if n >= 100e9:
+        return make_optimizer("adafactor", 1e-4)
+    if n >= 20e9:
+        return make_optimizer("adamw", 3e-4, moment_dtype=jnp.bfloat16)
+    return make_optimizer("adamw", 3e-4)
+
+
+def _token_batch_specs(cfg: ArchConfig, batch: int, seq: int):
+    """(specs, axes) for a training batch."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "audio":
+        dec = max(seq // DEC_FRACTION, 8)
+        specs = {"audio_embeds": S((batch, seq, cfg.d_model), dtype),
+                 "tokens": S((batch, dec), jnp.int32),
+                 "labels": S((batch, dec), jnp.int32)}
+        axes = {"audio_embeds": ("batch", None, None),
+                "tokens": ("batch", None), "labels": ("batch", None)}
+    elif cfg.family == "vlm":
+        p = cfg.num_patches
+        toks = max(seq - p, 8)
+        specs = {"patch_embeds": S((batch, p, cfg.d_model), dtype),
+                 "tokens": S((batch, toks), jnp.int32),
+                 "labels": S((batch, toks), jnp.int32)}
+        axes = {"patch_embeds": ("batch", None, None),
+                "tokens": ("batch", None), "labels": ("batch", None)}
+    else:
+        specs = {"tokens": S((batch, seq), jnp.int32),
+                 "labels": S((batch, seq), jnp.int32)}
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    return specs, axes
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _params_specs(model):
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    from repro.nn.module import Param, split_params
+    pdt = jnp.dtype(model.cfg.param_dtype)
+
+    def cast(dt):
+        return pdt if jnp.issubdtype(dt, jnp.floating) else dt
+
+    vals = jax.tree_util.tree_map(
+        lambda p: S(p.value.shape, cast(p.value.dtype)), tree,
+        is_leaf=lambda x: isinstance(x, Param))
+    axes = jax.tree_util.tree_map(
+        lambda p: p.axes, tree, is_leaf=lambda x: isinstance(x, Param))
+    return vals, axes
+
+
+ACT_BUDGET_BYTES = 9 * 1024 ** 3  # leave headroom under 16 GiB HBM
+
+
+def auto_microbatches(cfg: ArchConfig, shape: ShapeConfig,
+                      dp_shards: int = 16, seq_chunk: int = 512) -> int:
+    """Pick gradient-accumulation depth so per-device activations fit HBM.
+
+    Memory model (per device, per microbatch), empirically calibrated on the
+    compiled dry-run (see EXPERIMENTS.md §Dry-run):
+      - saved layer carries: L × tokens × d_model × 4 B (CPU pipeline stores
+        the remat stack at fp32 width),
+      - chunked-CE logits + cotangent: 2 × B × seq_chunk × vocab × 4 B,
+      - ~1.5 GiB headroom for attention/MoE transients.
+    """
+    b_dev = max(1, shape.global_batch // dp_shards)
+    n = 1
+    while n < b_dev:
+        b = b_dev // n
+        toks = b * shape.seq_len
+        layers = cfg.enc_layers + cfg.dec_layers \
+            if cfg.family == "audio" else cfg.num_layers
+        stack = layers * toks * cfg.d_model * 4
+        ce = 2 * b * min(seq_chunk, shape.seq_len) * cfg.vocab_size * 4
+        if stack + ce + (1.5 * 1024 ** 3) <= ACT_BUDGET_BYTES:
+            break
+        n *= 2
+    return n
+
+
+def make_cell(arch: str, shape_name: str, *,
+              n_microbatches: int | None = None) -> CellSpec:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    if not cfg.supports_shape(shape.name):
+        raise ValueError(f"{arch} does not support {shape.name} "
+                         "(full attention at 500k) — documented skip")
+    model = build_model(cfg)
+    param_specs, param_axes = _params_specs(model)
+
+    if shape.kind == "train":
+        opt = pick_optimizer(cfg)
+        opt_state_specs = _abstract(opt.init, param_specs)
+        opt_axes = opt.state_axes(param_axes)
+        batch_specs, batch_axes = _token_batch_specs(
+            cfg, shape.global_batch, shape.seq_len)
+        if n_microbatches is None:
+            n_microbatches = auto_microbatches(cfg, shape)
+        step = make_train_step(model, cfg, opt,
+                               n_microbatches=n_microbatches)
+        return CellSpec(cfg, shape, "train", step,
+                        (param_specs, opt_state_specs, batch_specs),
+                        (param_axes, opt_axes, batch_axes),
+                        donate=(0, 1),
+                        rule_overrides=CELL_RULE_OVERRIDES.get(
+                            (arch, shape.name), {}))
+
+    if shape.kind == "prefill":
+        batch_specs, batch_axes = _token_batch_specs(
+            cfg, shape.global_batch, shape.seq_len)
+        if cfg.family == "audio":
+            # encode full frames; decoder prefill of a short prompt
+            def prefill_fn(params, batch):
+                out, cache = model.prefill(
+                    params, batch["tokens"][:, :8],
+                    max_len=WHISPER_DECODE_SELF_LEN,
+                    audio_embeds=batch["audio_embeds"])
+                return out.logits, cache
+        else:
+            def prefill_fn(params, batch):
+                extras = {k: batch[k] for k in ("patch_embeds",)
+                          if k in batch}
+                out, cache = model.prefill(params, batch["tokens"],
+                                           max_len=shape.seq_len, **extras)
+                return out.logits, cache
+        return CellSpec(cfg, shape, "prefill", prefill_fn,
+                        (param_specs, batch_specs),
+                        (param_axes, batch_axes),
+                        rule_overrides=CELL_RULE_OVERRIDES.get(
+                            (arch, shape.name), {}))
+
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    if cfg.family == "audio":
+        cache_spec = _abstract(
+            lambda: model.init_cache(b, WHISPER_DECODE_SELF_LEN,
+                                     enc_len=shape.seq_len))
+    elif cfg.family == "ssm":
+        cache_spec = _abstract(lambda: model.init_cache(b))
+    else:
+        cache_spec = _abstract(lambda: model.init_cache(b, shape.seq_len))
+    cache_axes = model.cache_axes()
+    tok_spec = S((b, 1), jnp.int32)
+
+    def decode_fn(params, tokens, cache):
+        out, new_cache = model.decode_step(params, tokens, cache)
+        return out.logits, new_cache
+
+    return CellSpec(cfg, shape, "decode", decode_fn,
+                    (param_specs, tok_spec, cache_spec),
+                    (param_axes, ("batch", None), cache_axes),
+                    donate=(2,),
+                    rule_overrides=dict(
+                        {"seq": "model"},
+                        **CELL_RULE_OVERRIDES.get((arch, shape.name), {})))
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public helper: the ShapeDtypeStruct stand-ins for a cell's inputs."""
+    return make_cell(arch, shape_name).args

@@ -1,0 +1,91 @@
+"""End-to-end training driver for the assigned LM architectures.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b-smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Runs on whatever devices exist (1 CPU here; the production mesh path is the
+same code under launch/dryrun.py shardings).  Includes checkpoint/restart
+(resume is automatic if --ckpt-dir has a checkpoint), async saves, a
+SIGTERM preemption hook, and deterministic data skip-ahead.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.data.synthetic import token_batches
+from repro.distributed.fault_tolerance import CheckpointManager
+from repro.launch.specs import pick_optimizer
+from repro.models.registry import build_model, get_config
+from repro.nn.module import split_params
+from repro.train.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    opt = pick_optimizer(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    pdt = jnp.dtype(cfg.param_dtype)
+    params = jax.tree_util.tree_map(
+        lambda p: p.astype(pdt) if jnp.issubdtype(p.dtype, jnp.floating)
+        else p, params)
+    opt_state = opt.init(params)
+    step = 0
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir,
+                                save_interval_steps=args.ckpt_every)
+        restored = mgr.restore_latest((params, opt_state))
+        if restored is not None:
+            step, (params, opt_state), extra = restored
+            print(f"restored checkpoint at step {step}")
+
+    train_step = jax.jit(make_train_step(model, cfg, opt))
+    data = token_batches(batch=args.batch, seq=args.seq,
+                         vocab=cfg.vocab_size, steps=args.steps, seed=1)
+    if mgr is not None:
+        mgr.install_preemption_hook(lambda: (step, (params, opt_state), {}))
+
+    t0 = time.time()
+    for i, batch in enumerate(data):
+        if i < step:  # skip-ahead after restore (exactly-once replay)
+            continue
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        step = i + 1
+        if step % args.log_every == 0 or step == args.steps:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            toks = args.batch * args.seq * args.log_every
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"({toks / max(dt, 1e-9):,.0f} tok/s)", flush=True)
+            t0 = time.time()
+        if mgr is not None and mgr.should_save(step):
+            mgr.save_async(step, (params, opt_state))
+    if mgr is not None:
+        mgr.save_async(step, (params, opt_state))
+        mgr.wait()
+    print("training complete at step", step)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,60 @@
+"""Architecture registry: --arch <id> -> (ArchConfig, model builder)."""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, smoke_config
+
+_ARCH_MODULES = {
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id.endswith("-smoke"):
+        return smoke_config(get_config(arch_id[: -len("-smoke")]))
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_IDS)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def build_model(cfg: ArchConfig):
+    """Instantiate the model for a config.  All models share the protocol:
+    init / __call__(train) / prefill / init_cache / decode_step."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.nn.transformer import DecoderLM
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.rwkv import RWKV6LM
+        return RWKV6LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.zamba import Zamba2LM
+        return Zamba2LM(cfg)
+    if cfg.family == "audio":
+        from repro.models.whisper import WhisperModel
+        return WhisperModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) pairs that are runnable (skips documented in
+    DESIGN.md §Arch-applicability)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if cfg.supports_shape(shape):
+                cells.append((arch, shape))
+    return cells

@@ -1,0 +1,155 @@
+"""RWKV6 ("Finch") language model — attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.nn.layers import Embedding, LayerNorm, Linear
+from repro.nn.module import Module, init_stacked
+from repro.nn.ssm import RWKV6ChannelMix, RWKV6TimeMix
+from repro.nn.transformer import LMOutput, zero_aux
+
+
+class RWKVCache(NamedTuple):
+    shift_tm: jnp.ndarray  # [L, B, d]
+    wkv: jnp.ndarray       # [L, B, H, dk, dk]
+    shift_cm: jnp.ndarray  # [L, B, d]
+    length: jnp.ndarray    # [] int32
+
+
+class RWKVBlock(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.tm = RWKV6TimeMix(cfg.d_model, head_dim=cfg.ssm_head_dim)
+        self.cm = RWKV6ChannelMix(cfg.d_model, cfg.d_ff)
+        self.ln1 = LayerNorm(cfg.d_model)
+        self.ln2 = LayerNorm(cfg.d_model)
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"tm": self.tm.init(k1), "cm": self.cm.init(k2),
+                "ln1": self.ln1.init(k3), "ln2": self.ln2.init(k4)}
+
+    def __call__(self, params, x, shift_tm, wkv, shift_cm):
+        h = self.ln1(params["ln1"], x)
+        y, shift_tm, wkv = self.tm(params["tm"], h, shift_tm, wkv)
+        x = x + y
+        h = self.ln2(params["ln2"], x)
+        y, shift_cm = self.cm(params["cm"], h, shift_cm)
+        x = x + y
+        return shard_activation(x, ("batch", "seq", None)), shift_tm, wkv, shift_cm
+
+    def decode(self, params, x, shift_tm, wkv, shift_cm):
+        h = self.ln1(params["ln1"], x)
+        y, shift_tm, wkv = self.tm.decode_step(params["tm"], h, shift_tm, wkv)
+        x = x + y
+        h = self.ln2(params["ln2"], x)
+        y, shift_cm = self.cm(params["cm"], h, shift_cm)
+        x = x + y
+        return x, shift_tm, wkv, shift_cm
+
+
+class RWKV6LM(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.embed = Embedding(cfg.vocab_size, cfg.d_model)
+        self.block = RWKVBlock(cfg)
+        self.ln_in = LayerNorm(cfg.d_model)
+        self.ln_out = LayerNorm(cfg.d_model)
+        self.head = (None if cfg.tie_embeddings else
+                     Linear(cfg.d_model, cfg.vocab_size, use_bias=False,
+                            kernel_axes=("embed", "vocab")))
+
+    def init(self, key):
+        ks = jax.random.split(key, 5)
+        p = {"embed": self.embed.init(ks[0]),
+             "blocks": init_stacked(self.block, ks[1], self.cfg.num_layers),
+             "ln_in": self.ln_in.init(ks[2]),
+             "ln_out": self.ln_out.init(ks[3])}
+        if self.head is not None:
+            p["head"] = self.head.init(ks[4])
+        return p
+
+    def _logits(self, params, x):
+        x = self.ln_out(params["ln_out"], x)
+        if self.head is not None:
+            logits = self.head(params["head"], x)
+        else:
+            logits = self.embed.attend(params["embed"], x)
+        return logits.astype(jnp.float32)
+
+    def init_cache(self, batch: int, max_len: int = 0) -> RWKVCache:
+        cfg = self.cfg
+        l, d = cfg.num_layers, cfg.d_model
+        h = d // cfg.ssm_head_dim
+        p = cfg.ssm_head_dim
+        return RWKVCache(
+            jnp.zeros((l, batch, d), jnp.float32),
+            jnp.zeros((l, batch, h, p, p), jnp.float32),
+            jnp.zeros((l, batch, d), jnp.float32),
+            jnp.zeros((), jnp.int32))
+
+    def cache_axes(self) -> RWKVCache:
+        # wkv state: try heads over "model"; if the head count doesn't
+        # divide the mesh (40 % 16 != 0) the greedy resolver falls through
+        # to sharding the value dim ("mlp" -> model) instead.
+        return RWKVCache(("layers", "batch", None),
+                         ("layers", "batch", "heads", None, "mlp"),
+                         ("layers", "batch", None), ())
+
+    def _run(self, params, tokens, cache: RWKVCache):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        x = self.ln_in(params["ln_in"], x)
+        x = shard_activation(x, ("batch", "seq", None))
+
+        def body(x, inp):
+            lp, s_tm, wkv, s_cm = inp
+            x, s_tm, wkv, s_cm = self.block(lp, x, s_tm, wkv, s_cm)
+            return x, (s_tm, wkv, s_cm)
+
+        from repro.nn.transformer import maybe_remat
+        body = maybe_remat(body, self.cfg)
+        x, (s_tm, wkv, s_cm) = jax.lax.scan(
+            body, x, (params["blocks"], cache.shift_tm, cache.wkv,
+                      cache.shift_cm))
+        new_cache = RWKVCache(s_tm, wkv, s_cm,
+                              cache.length + tokens.shape[1])
+        return x, new_cache
+
+    def backbone(self, params, tokens, **_):
+        cache = self.init_cache(tokens.shape[0])
+        x, _ = self._run(params, tokens, cache)
+        return x, zero_aux()
+
+    def apply_head(self, params, x):
+        return self._logits(params, x)
+
+    def __call__(self, params, tokens, **_) -> LMOutput:
+        x, aux = self.backbone(params, tokens)
+        return LMOutput(self.apply_head(params, x), aux)
+
+    def prefill(self, params, tokens, max_len: int | None = None, **_):
+        cache = self.init_cache(tokens.shape[0])
+        x, cache = self._run(params, tokens, cache)
+        return LMOutput(self._logits(params, x[:, -1:]), zero_aux()), cache
+
+    def decode_step(self, params, tokens, cache: RWKVCache):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        x = self.ln_in(params["ln_in"], x)
+
+        def body(x, inp):
+            lp, s_tm, wkv, s_cm = inp
+            x, s_tm, wkv, s_cm = self.block.decode(lp, x, s_tm, wkv, s_cm)
+            return x, (s_tm, wkv, s_cm)
+
+        x, (s_tm, wkv, s_cm) = jax.lax.scan(
+            body, x, (params["blocks"], cache.shift_tm, cache.wkv,
+                      cache.shift_cm))
+        new_cache = RWKVCache(s_tm, wkv, s_cm, cache.length + tokens.shape[1])
+        return LMOutput(self._logits(params, x), zero_aux()), new_cache

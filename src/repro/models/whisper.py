@@ -1,0 +1,264 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings [B, T_frames, d_model].  The transformer
+backbone (enc self-attn, dec self+cross attn) is complete.
+
+Shape mapping for the canonical cells:
+  train_4k    : encoder frames = seq_len, decoder tokens = seq_len // 4
+  prefill_32k : encode 32k frames + prefill decoder BOS
+  decode_32k  : one decoder token; cross-attends to 32k encoded frames,
+                self-attends to a 1k decoder cache
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.nn.attention import Attention, KVCache, sinusoidal_positions
+from repro.nn.layers import Embedding, LayerNorm, Linear, MLP
+from repro.nn.module import Module, init_stacked
+from repro.nn.transformer import LMOutput, zero_aux
+
+DECODER_FRACTION = 4  # decoder tokens = frames // 4 in train cells
+
+
+class WhisperCache(NamedTuple):
+    dec_k: jnp.ndarray    # [L, B, S_dec, K, D] decoder self-attn cache
+    dec_v: jnp.ndarray
+    enc_k: jnp.ndarray    # [L, B, T_enc, K, D] cross-attn K/V (precomputed)
+    enc_v: jnp.ndarray
+    enc_valid: jnp.ndarray
+    length: jnp.ndarray
+
+
+class EncoderBlock(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.attn = Attention(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, qkv_bias=True, out_bias=True,
+                              rope=False, causal=False,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        self.mlp = MLP(cfg.d_model, cfg.d_ff, activation="gelu", gated=False,
+                       use_bias=True)
+        self.ln1 = LayerNorm(cfg.d_model)
+        self.ln2 = LayerNorm(cfg.d_model)
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        return {"attn": self.attn.init(ks[0]), "mlp": self.mlp.init(ks[1]),
+                "ln1": self.ln1.init(ks[2]), "ln2": self.ln2.init(ks[3])}
+
+    def __call__(self, params, x):
+        x = x + self.attn(params["attn"], self.ln1(params["ln1"], x))
+        x = x + self.mlp(params["mlp"], self.ln2(params["ln2"], x))
+        return shard_activation(x, ("batch", "seq", None))
+
+
+class DecoderBlockXAttn(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.self_attn = Attention(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, qkv_bias=True, out_bias=True,
+                                   rope=False, causal=True,
+                                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        self.cross_attn = Attention(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, qkv_bias=True, out_bias=True,
+                                    rope=False, causal=False,
+                                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        self.mlp = MLP(cfg.d_model, cfg.d_ff, activation="gelu", gated=False,
+                       use_bias=True)
+        self.ln1 = LayerNorm(cfg.d_model)
+        self.ln2 = LayerNorm(cfg.d_model)
+        self.ln3 = LayerNorm(cfg.d_model)
+
+    def init(self, key):
+        ks = jax.random.split(key, 6)
+        return {"self_attn": self.self_attn.init(ks[0]),
+                "cross_attn": self.cross_attn.init(ks[1]),
+                "mlp": self.mlp.init(ks[2]), "ln1": self.ln1.init(ks[3]),
+                "ln2": self.ln2.init(ks[4]), "ln3": self.ln3.init(ks[5])}
+
+    def __call__(self, params, x, enc_kv):
+        x = x + self.self_attn(params["self_attn"],
+                               self.ln1(params["ln1"], x))
+        x = x + self.cross_attn(params["cross_attn"],
+                                self.ln2(params["ln2"], x), kv=enc_kv)
+        x = x + self.mlp(params["mlp"], self.ln3(params["ln3"], x))
+        return shard_activation(x, ("batch", "seq", None))
+
+    def decode(self, params, x, cache: KVCache, enc_k, enc_v, enc_valid):
+        h = self.ln1(params["ln1"], x)
+        y, cache = self.self_attn.decode_step(params["self_attn"], h, cache)
+        x = x + y
+        h = self.ln2(params["ln2"], x)
+        x = x + self.cross_attn.cross_decode_step(params["cross_attn"], h,
+                                                  enc_k, enc_v,
+                                                  kv_valid=enc_valid)
+        x = x + self.mlp(params["mlp"], self.ln3(params["ln3"], x))
+        return x, cache
+
+
+class WhisperModel(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.enc_layers = cfg.enc_layers or cfg.num_layers
+        self.dec_layers = cfg.dec_layers or cfg.num_layers
+        self.embed = Embedding(cfg.vocab_size, cfg.d_model)
+        self.enc_block = EncoderBlock(cfg)
+        self.dec_block = DecoderBlockXAttn(cfg)
+        self.ln_enc = LayerNorm(cfg.d_model)
+        self.ln_dec = LayerNorm(cfg.d_model)
+
+    def init(self, key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": self.embed.init(ks[0]),
+            "encoder": init_stacked(self.enc_block, ks[1], self.enc_layers),
+            "decoder": init_stacked(self.dec_block, ks[2], self.dec_layers),
+            "ln_enc": self.ln_enc.init(ks[3]),
+            "ln_dec": self.ln_dec.init(ks[4]),
+        }
+
+    # ---- encoder ---------------------------------------------------------
+
+    def encode(self, params, audio_embeds):
+        """audio_embeds: [B, T, d_model] (stub frontend output)."""
+        b, t, d = audio_embeds.shape
+        x = audio_embeds + sinusoidal_positions(t, d).astype(
+            audio_embeds.dtype)[None]
+        x = shard_activation(x, ("batch", "seq", None))
+
+        def body(x, lp):
+            return self.enc_block(lp, x), None
+
+        from repro.nn.transformer import maybe_remat
+        body = maybe_remat(body, self.cfg)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return self.ln_enc(params["ln_enc"], x)
+
+    def _cross_kvs(self, params, enc_out):
+        """Precompute per-decoder-layer cross K/V with a scan."""
+        def body(_, lp):
+            k, v = self.dec_block.cross_attn.cross_kv(lp["cross_attn"],
+                                                      enc_out)
+            return None, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(body, None, params["decoder"])
+        return ks, vs
+
+    def _decoder_embed(self, params, tokens, offset=0):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        pos = sinusoidal_positions(8192, self.cfg.d_model).astype(dtype)
+        s = tokens.shape[1]
+        x = x + jax.lax.dynamic_slice_in_dim(pos, offset, s, axis=0)[None]
+        return x
+
+    def _logits(self, params, x):
+        x = self.ln_dec(params["ln_dec"], x)
+        return self.embed.attend(params["embed"], x).astype(jnp.float32)
+
+    # ---- train (teacher forcing) -------------------------------------------
+
+    def backbone(self, params, tokens, *, audio_embeds=None, **_):
+        enc_out = self.encode(params, audio_embeds)
+        ks, vs = self._cross_kvs(params, enc_out)
+        x = self._decoder_embed(params, tokens)
+
+        def body(x, inp):
+            lp, k, v = inp
+            return self.dec_block(lp, x, (k, v)), None
+
+        from repro.nn.transformer import maybe_remat
+        body = maybe_remat(body, self.cfg)
+        x, _ = jax.lax.scan(body, x, (params["decoder"], ks, vs))
+        return x, zero_aux()
+
+    def apply_head(self, params, x):
+        return self._logits(params, x)
+
+    def __call__(self, params, tokens, *, audio_embeds=None, **_) -> LMOutput:
+        x, aux = self.backbone(params, tokens, audio_embeds=audio_embeds)
+        return LMOutput(self.apply_head(params, x), aux)
+
+    # ---- serving --------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0
+                   ) -> WhisperCache:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        kd = (batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+        ke = (batch, max(enc_len, 1), cfg.n_kv_heads, cfg.resolved_head_dim)
+        l = self.dec_layers
+        return WhisperCache(
+            jnp.zeros((l,) + kd, dtype), jnp.zeros((l,) + kd, dtype),
+            jnp.zeros((l,) + ke, dtype), jnp.zeros((l,) + ke, dtype),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+    def cache_axes(self) -> WhisperCache:
+        kv = ("layers", "batch", "seq", "kv_heads", None)
+        return WhisperCache(kv, kv, kv, kv, (), ())
+
+    def prefill(self, params, tokens, max_len: int | None = None, *,
+                audio_embeds=None, **_):
+        enc_out = self.encode(params, audio_embeds)
+        ks, vs = self._cross_kvs(params, enc_out)
+        b, s = tokens.shape
+        x = self._decoder_embed(params, tokens)
+
+        def body(x, inp):
+            lp, k, v = inp
+            h = self.dec_block.ln1(lp["ln1"], x)
+            bq, sq, _ = h.shape
+            pos = jnp.broadcast_to(jnp.arange(sq)[None], (bq, sq))
+            q, sk, sv = self.dec_block.self_attn._project(lp["self_attn"], h,
+                                                          pos)
+            from repro.nn.attention import causal_mask, gqa_attention
+            out = gqa_attention(q, sk, sv, causal_mask(sq, sq, 0))
+            y = self.dec_block.self_attn.wo(lp["self_attn"]["wo"],
+                                            out.reshape(bq, sq, -1))
+            x = x + y
+            h = self.dec_block.ln2(lp["ln2"], x)
+            x = x + self.dec_block.cross_attn(lp["cross_attn"], h, kv=(k, v))
+            x = x + self.dec_block.mlp(lp["mlp"],
+                                       self.dec_block.ln3(lp["ln3"], x))
+            return x, (sk, sv)
+
+        x, (dks, dvs) = jax.lax.scan(body, x, (params["decoder"], ks, vs))
+        max_len = max_len or s
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        if max_len > s:
+            pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            dks = jnp.pad(dks.astype(dtype), pad)
+            dvs = jnp.pad(dvs.astype(dtype), pad)
+        cache = WhisperCache(dks.astype(dtype), dvs.astype(dtype),
+                             ks.astype(dtype), vs.astype(dtype),
+                             jnp.asarray(enc_out.shape[1], jnp.int32),
+                             jnp.asarray(s, jnp.int32))
+        return LMOutput(self._logits(params, x[:, -1:]), zero_aux()), cache
+
+    def decode_step(self, params, tokens, cache: WhisperCache):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        pos = sinusoidal_positions(8192, self.cfg.d_model).astype(dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pos, cache.length, tokens.shape[1], axis=0)[None]
+
+        def body(x, inp):
+            lp, dk, dv, ek, ev = inp
+            layer_cache = KVCache(dk, dv, cache.length)
+            x, lc = self.dec_block.decode(lp, x, layer_cache, ek, ev,
+                                          cache.enc_valid)
+            return x, (lc.k, lc.v)
+
+        x, (dks, dvs) = jax.lax.scan(
+            body, x, (params["decoder"], cache.dec_k, cache.dec_v,
+                      cache.enc_k, cache.enc_v))
+        new_cache = cache._replace(dec_k=dks, dec_v=dvs,
+                                   length=cache.length + tokens.shape[1])
+        return LMOutput(self._logits(params, x), zero_aux()), new_cache

@@ -1,0 +1,193 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every `hybrid_attn_every` layers (weight sharing — one param set,
+G invocations, each with its own KV cache)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.nn.attention import KVCache
+from repro.nn.layers import Embedding, Linear, RMSNorm, MLP
+from repro.nn.module import Module, init_stacked
+from repro.nn.ssm import Mamba2, Mamba2State
+from repro.nn.transformer import DecoderBlock, LMOutput, zero_aux
+
+
+class ZambaCache(NamedTuple):
+    ssm: jnp.ndarray    # [L, B, H, P, N]
+    conv: jnp.ndarray   # [L, B, K-1, conv_dim]
+    k: jnp.ndarray      # [G, B, S, Kh, Dh] shared-attn KV per application
+    v: jnp.ndarray
+    length: jnp.ndarray
+
+
+class MambaResidualBlock(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.norm = RMSNorm(cfg.d_model)
+        self.mamba = Mamba2(cfg.d_model, d_state=cfg.ssm_state,
+                            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"norm": self.norm.init(k1), "mamba": self.mamba.init(k2)}
+
+    def __call__(self, params, x, state: Mamba2State):
+        h = self.norm(params["norm"], x)
+        y, state = self.mamba(params["mamba"], h, state)
+        return x + y, state
+
+    def decode(self, params, x, state: Mamba2State):
+        h = self.norm(params["norm"], x)
+        y, state = self.mamba.decode_step(params["mamba"], h, state)
+        return x + y, state
+
+
+class Zamba2LM(Module):
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.embed = Embedding(cfg.vocab_size, cfg.d_model)
+        self.mamba_block = MambaResidualBlock(cfg)
+        # the shared attention+MLP block (single param set, applied G times)
+        self.shared = DecoderBlock(cfg)
+        self.final_norm = RMSNorm(cfg.d_model)
+        self.n_groups = max(1, cfg.num_layers // cfg.hybrid_attn_every)
+
+    def group_sizes(self) -> list[int]:
+        l, g = self.cfg.num_layers, self.n_groups
+        base = l // g
+        rem = l - base * g
+        return [base + (1 if i < rem else 0) for i in range(g)]
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": self.embed.init(k1),
+            "mamba": init_stacked(self.mamba_block, k2, self.cfg.num_layers),
+            "shared": self.shared.init(k3),
+            "final_norm": self.final_norm.init(k4),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> ZambaCache:
+        cfg = self.cfg
+        m = self.mamba_block.mamba
+        dtype = jnp.dtype(cfg.compute_dtype)
+        return ZambaCache(
+            ssm=jnp.zeros((cfg.num_layers, batch, m.n_heads, m.head_dim,
+                           m.d_state), jnp.float32),
+            conv=jnp.zeros((cfg.num_layers, batch, m.conv_kernel - 1,
+                            m.conv_dim), jnp.float32),
+            k=jnp.zeros((self.n_groups, batch, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), dtype),
+            v=jnp.zeros((self.n_groups, batch, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), dtype),
+            length=jnp.zeros((), jnp.int32))
+
+    def cache_axes(self) -> ZambaCache:
+        kv = (None, "batch", "seq", "kv_heads", None)
+        return ZambaCache(("layers", "batch", "heads", None, None),
+                          ("layers", "batch", None, "mlp"),
+                          kv, kv, ())
+
+    def _slice(self, tree, start, size):
+        return jax.tree_util.tree_map(lambda a: a[start:start + size], tree)
+
+    def _logits(self, params, x):
+        x = self.final_norm(params["final_norm"], x)
+        logits = self.embed.attend(params["embed"], x)
+        return logits.astype(jnp.float32)
+
+    def _run_groups(self, params, x, cache: ZambaCache, mode: str):
+        """mode: 'train' | 'prefill' | 'decode'."""
+        sizes = self.group_sizes()
+        start = 0
+        new_ssm, new_conv, new_k, new_v = [], [], [], []
+        aux_total = zero_aux()
+        for g, size in enumerate(sizes):
+            lp = self._slice(params["mamba"], start, size)
+            st = Mamba2State(cache.ssm[start:start + size],
+                             cache.conv[start:start + size])
+
+            if mode == "decode":
+                def body(x, inp):
+                    p, s_ssm, s_conv = inp
+                    x, s = self.mamba_block.decode(p, x,
+                                                   Mamba2State(s_ssm, s_conv))
+                    return x, (s.ssm, s.conv)
+            else:
+                def body(x, inp):
+                    p, s_ssm, s_conv = inp
+                    x, s = self.mamba_block(p, x, Mamba2State(s_ssm, s_conv))
+                    return x, (s.ssm, s.conv)
+
+            if mode == "train":
+                from repro.nn.transformer import maybe_remat
+                body = maybe_remat(body, self.cfg)
+            x, (ssm_g, conv_g) = jax.lax.scan(body, x, (lp, st.ssm, st.conv))
+            new_ssm.append(ssm_g)
+            new_conv.append(conv_g)
+            start += size
+            # shared attention block application #g
+            if mode == "train":
+                x, aux = self.shared(params["shared"], x)
+            elif mode == "prefill":
+                x, (k_g, v_g), aux = self.shared.prefill(params["shared"], x)
+                new_k.append(k_g)
+                new_v.append(v_g)
+            else:
+                layer_cache = KVCache(cache.k[g], cache.v[g], cache.length)
+                x, lc, aux = self.shared.decode(params["shared"], x,
+                                                layer_cache)
+                new_k.append(lc.k)
+                new_v.append(lc.v)
+            aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+        ssm = jnp.concatenate(new_ssm, axis=0)
+        conv = jnp.concatenate(new_conv, axis=0)
+        if new_k:
+            k = jnp.stack(new_k)
+            v = jnp.stack(new_v)
+        else:
+            k, v = cache.k, cache.v
+        return x, ZambaCache(ssm, conv, k, v, cache.length), aux_total
+
+    def backbone(self, params, tokens, **_):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        cache = self.init_cache(tokens.shape[0], max_len=0)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        x = shard_activation(x, ("batch", "seq", None))
+        x, _, aux = self._run_groups(params, x, cache, "train")
+        return x, aux
+
+    def apply_head(self, params, x):
+        return self._logits(params, x)
+
+    def __call__(self, params, tokens, **_) -> LMOutput:
+        x, aux = self.backbone(params, tokens)
+        return LMOutput(self.apply_head(params, x), aux)
+
+    def prefill(self, params, tokens, max_len: int | None = None, **_):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        b, s = tokens.shape
+        cache = self.init_cache(b, max_len=0)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        x, cache, aux = self._run_groups(params, x, cache, "prefill")
+        max_len = max_len or s
+        kdt = jnp.dtype(self.cfg.compute_dtype)
+        cache = cache._replace(k=cache.k.astype(kdt), v=cache.v.astype(kdt))
+        if max_len > s:
+            pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            cache = cache._replace(k=jnp.pad(cache.k, pad),
+                                   v=jnp.pad(cache.v, pad))
+        cache = cache._replace(length=jnp.asarray(s, jnp.int32))
+        return LMOutput(self._logits(params, x[:, -1:]), aux), cache
+
+    def decode_step(self, params, tokens, cache: ZambaCache):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        x, new_cache, aux = self._run_groups(params, x, cache, "decode")
+        new_cache = new_cache._replace(length=cache.length + tokens.shape[1])
+        return LMOutput(self._logits(params, x), aux), new_cache

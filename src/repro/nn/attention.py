@@ -1,0 +1,316 @@
+"""Multi-head attention: GQA, RoPE, KV cache, causal/bidirectional/cross.
+
+Design notes (TPU):
+  * einsum formulation keeps head dims explicit: [B, S, H, D].
+  * GQA: n_q_heads = n_kv_heads * q_per_kv; we reshape queries to
+    [B, S, K, Q/K, D] so the kv tensors broadcast — no repeat-materialise.
+  * Decode path consumes a KVCache pytree of static max_len; new entries are
+    written with dynamic_update_slice, masking handles validity.
+  * Sharding: logical axes "heads"/"kv_heads" on the head dims; the
+    distributed layer maps them to the "model" mesh axis (GSPMD handles
+    non-divisible head counts by padding).
+  * An optional Pallas flash-attention kernel (repro.kernels.flash_attention)
+    replaces the einsum path for long prefill when `use_flash=True`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, lecun_normal
+from repro.nn.layers import Linear
+
+DEFAULT_MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [D/2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] absolute token positions."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, S, 1, D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings [S, dim]."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(dim // 2, dtype=jnp.float32)
+                  / max(dim // 2 - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Static-size decode cache for one attention layer (or a stacked set)."""
+
+    k: jnp.ndarray  # [B, max_len, K, D] (+ leading layer dim when stacked)
+    v: jnp.ndarray  # [B, max_len, K, D]
+    length: jnp.ndarray  # [] int32 — number of valid positions
+
+    @staticmethod
+    def zeros(batch: int, max_len: int, n_kv: int, head_dim: int,
+              dtype=jnp.bfloat16, layers: int | None = None) -> "KVCache":
+        shape = (batch, max_len, n_kv, head_dim)
+        if layers is not None:
+            shape = (layers,) + shape
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros((), jnp.int32))
+
+    def update(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "KVCache":
+        """Append [B, S_new, K, D] at position `length` (single layer view)."""
+        start = (0, self.length, 0, 0)
+        k = jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), start)
+        v = jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), start)
+        return KVCache(k, v, self.length + k_new.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, K, D] with H = K * G.
+    mask: broadcastable to [B, 1, 1, Sq, Skv] (True = attend).
+    """
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, sq, kheads, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, DEFAULT_MASK_VALUE)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def chunked_gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                          causal: bool = True, q_offset=0,
+                          q_chunk: int = 512, kv_chunk: int = 1024,
+                          kv_valid=None,
+                          skip_masked_chunks: bool = False) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure XLA (lax.scan blocks).
+
+    Never materialises the [Sq, Skv] logit matrix: memory is
+    O(q_chunk * kv_chunk) per step.  This is the production path used inside
+    pjit for train/prefill; the Pallas kernel is the TPU-tuned equivalent.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, K, D].  q_offset: absolute position of
+    q[0] relative to kv[0] (for prefill continuation).
+    skip_masked_chunks: with causal=True, lax.cond-skip kv chunks entirely
+    above the diagonal (hillclimb knob: halves compute term).
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    assert sq % qc == 0 and skv % kc == 0, (sq, qc, skv, kc)
+    nq, nk = sq // qc, skv // kc
+
+    qg = (q.reshape(b, nq, qc, kh, g, d) * scale).astype(jnp.float32)
+    kf = k.reshape(b, nk, kc, kh, d).astype(jnp.float32)
+    vf = v.reshape(b, nk, kc, kh, d).astype(jnp.float32)
+    qpos = (jnp.arange(sq) + q_offset).reshape(nq, qc)
+    kpos = jnp.arange(skv).reshape(nk, kc)
+
+    def kv_body(carry, inp):
+        m, l, acc, qi, qp = carry
+        ki, kp, vi, kpi = inp  # k chunk, k positions, v chunk, chunk idx
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki)
+        mask = jnp.ones((qc, kc), bool)
+        if causal:
+            mask = mask & (kp[None, :] <= qp[:, None])
+        if kv_valid is not None:
+            mask = mask & (kp < kv_valid)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, DEFAULT_MASK_VALUE)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vi)
+        return (m_new, l_new, acc_new, qi, qp), None
+
+    kv_body_ckpt = jax.checkpoint(kv_body)
+
+    def q_body(_, inp):
+        qi, qp = inp
+        m0 = jnp.full((b, kh, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, d), jnp.float32)
+
+        def step(carry, kv_inp):
+            if not (causal and skip_masked_chunks):
+                return kv_body_ckpt(carry, kv_inp)
+            _, kp, _, _ = kv_inp
+            # skip chunks whose first kv position exceeds last q position
+            return jax.lax.cond(
+                kp[0] <= qp[-1],
+                lambda c, i: kv_body_ckpt(c, i),
+                lambda c, i: (c, None), carry, kv_inp)
+
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            step, (m0, l0, a0, qi, qp),
+            (jnp.moveaxis(kf, 1, 0), kpos, jnp.moveaxis(vf, 1, 0),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return None, out  # [B, K, G, qc, D]
+
+    _, outs = jax.lax.scan(q_body, None,
+                           (jnp.moveaxis(qg, 1, 0), qpos))
+    # outs: [nq, B, K, G, qc, D] -> [B, Sq, H, D]
+    out = jnp.moveaxis(outs, 0, 1)  # [B, nq, K, G, qc, D]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def causal_mask(sq: int, skv: int, q_offset) -> jnp.ndarray:
+    """[1, 1, 1, Sq, Skv] causal mask; query i attends kv j iff j <= i+offset."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    return (kpos <= qpos)[None, None, None]
+
+
+def length_mask(skv: int, valid_len) -> jnp.ndarray:
+    return (jnp.arange(skv) < valid_len)[None, None, None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Attention layer
+# ---------------------------------------------------------------------------
+
+class Attention(Module):
+    """GQA attention layer with optional RoPE, bias and flash kernel."""
+
+    def __init__(self, d_model: int, n_heads: int, n_kv_heads: int,
+                 head_dim: int | None = None, *, qkv_bias: bool = False,
+                 out_bias: bool = False, rope: bool = True,
+                 rope_theta: float = 10000.0, causal: bool = True,
+                 use_flash: bool = False, chunk_threshold: int = 1024,
+                 q_chunk: int = 512, kv_chunk: int = 1024,
+                 skip_masked_chunks: bool = False, name: str = "attn"):
+        self.chunk_threshold = chunk_threshold
+        self.q_chunk = q_chunk
+        self.kv_chunk = kv_chunk
+        self.skip_masked_chunks = skip_masked_chunks
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_kv = n_kv_heads
+        self.head_dim = head_dim or d_model // n_heads
+        self.rope = rope
+        self.rope_theta = rope_theta
+        self.causal = causal
+        self.use_flash = use_flash
+        self.name = name
+        hd = self.head_dim
+        self.wq = Linear(d_model, n_heads * hd, use_bias=qkv_bias,
+                         kernel_axes=("embed", "heads"))
+        self.wk = Linear(d_model, n_kv_heads * hd, use_bias=qkv_bias,
+                         kernel_axes=("embed", "kv_heads"))
+        self.wv = Linear(d_model, n_kv_heads * hd, use_bias=qkv_bias,
+                         kernel_axes=("embed", "kv_heads"))
+        self.wo = Linear(n_heads * hd, d_model, use_bias=out_bias,
+                         kernel_axes=("heads", "embed"))
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        return {"wq": self.wq.init(ks[0]), "wk": self.wk.init(ks[1]),
+                "wv": self.wv.init(ks[2]), "wo": self.wo.init(ks[3])}
+
+    def _project(self, params, x, positions):
+        b, s, _ = x.shape
+        q = self.wq(params["wq"], x).reshape(b, s, self.n_heads, self.head_dim)
+        k = self.wk(params["wk"], x).reshape(b, s, self.n_kv, self.head_dim)
+        v = self.wv(params["wv"], x).reshape(b, s, self.n_kv, self.head_dim)
+        if self.rope:
+            q = apply_rope(q, positions, self.rope_theta)
+            k = apply_rope(k, positions, self.rope_theta)
+        return q, k, v
+
+    def __call__(self, params, x, *, positions=None, mask=None,
+                 kv: tuple[jnp.ndarray, jnp.ndarray] | None = None):
+        """Full-sequence (train / prefill) attention.
+
+        kv: optional externally-provided (k, v) for cross attention.
+        """
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if kv is None:
+            q, k, v = self._project(params, x, positions)
+        else:
+            q = self.wq(params["wq"], x).reshape(b, s, self.n_heads, self.head_dim)
+            if self.rope:
+                q = apply_rope(q, positions, self.rope_theta)
+            k, v = kv
+        skv = k.shape[1]
+        if self.use_flash and mask is None and kv is None:
+            from repro.kernels.flash_attention import ops as flash_ops
+            out = flash_ops.flash_attention(q, k, v, causal=self.causal)
+        elif mask is None and max(s, skv) >= self.chunk_threshold:
+            out = chunked_gqa_attention(
+                q, k, v, causal=(self.causal and kv is None),
+                q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+                skip_masked_chunks=self.skip_masked_chunks)
+        else:
+            if mask is None and self.causal and kv is None:
+                mask = causal_mask(s, skv, 0)
+            out = gqa_attention(q, k, v, mask)
+        return self.wo(params["wo"], out.reshape(b, s, -1))
+
+    def cross_kv(self, params, enc: jnp.ndarray):
+        """Precompute cross-attention K/V from encoder output."""
+        b, s, _ = enc.shape
+        k = self.wk(params["wk"], enc).reshape(b, s, self.n_kv, self.head_dim)
+        v = self.wv(params["wv"], enc).reshape(b, s, self.n_kv, self.head_dim)
+        return k, v
+
+    def decode_step(self, params, x, cache: KVCache, *,
+                    positions=None) -> tuple[jnp.ndarray, KVCache]:
+        """x: [B, S_new, d]; appends to cache and attends to full prefix."""
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(
+                cache.length + jnp.arange(s)[None], (b, s))
+        q, k, v = self._project(params, x, positions)
+        cache = cache.update(k, v)
+        skv = cache.k.shape[1]
+        mask = (causal_mask(s, skv, cache.length - s)
+                & length_mask(skv, cache.length))
+        out = gqa_attention(q, cache.k, cache.v, mask)
+        return self.wo(params["wo"], out.reshape(b, s, -1)), cache
+
+    def cross_decode_step(self, params, x, k, v, *, kv_valid=None):
+        """Cross attention during decode (cached encoder K/V)."""
+        b, s, _ = x.shape
+        q = self.wq(params["wq"], x).reshape(b, s, self.n_heads, self.head_dim)
+        mask = None if kv_valid is None else length_mask(k.shape[1], kv_valid)
+        out = gqa_attention(q, k, v, mask)
+        return self.wo(params["wo"], out.reshape(b, s, -1))

@@ -1,0 +1,161 @@
+"""Minimal functional parameter management for repro.
+
+No flax/haiku in this environment; we use a deliberately small, explicit
+scheme:
+
+  * Parameters live in nested dicts (pytrees) of ``jnp.ndarray``.
+  * During ``Module.init`` every leaf is a :class:`Param` carrying both the
+    initial value and the tuple of *logical axis names* used by the
+    distributed layer to derive a ``PartitionSpec``.  ``split_params``
+    separates the value tree from the axes tree so the value tree is a plain
+    array pytree (jit/grad friendly) while the axes tree stays static.
+  * Layer stacking for ``lax.scan`` uses ``init_stacked`` (vmap over init),
+    which prepends a "layers" logical axis.
+
+The scheme is single-sourced: value + sharding axes are declared at the same
+place, so they cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Axes = tuple[Any, ...]  # logical axis names (str or None) per array dim
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """An array leaf annotated with logical sharding axes."""
+
+    value: jnp.ndarray
+    axes: Axes = ()
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a Param tree into (values, axes) trees of identical structure."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def map_params(fn: Callable[[Param], Param], tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_param)
+
+
+def param_count(values: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(values))
+
+
+def param_bytes(values: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(values))
+
+
+class Module:
+    """Base class: subclasses define ``init(key) -> Param tree`` and
+    ``__call__(params, *args, **kwargs)``.  Modules hold only static config
+    (hashable), never arrays, so they can be closed over inside jit."""
+
+    def init(self, key: jax.Array) -> PyTree:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def init_values(self, key: jax.Array) -> PyTree:
+        """Init returning plain arrays (axes stripped)."""
+        return split_params(self.init(key))[0]
+
+    def axes(self, key: jax.Array | None = None) -> PyTree:
+        """Logical axes tree (uses abstract init; no FLOPs)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tree = jax.eval_shape(self.init, key)
+        return jax.tree_util.tree_map(
+            lambda p: p.axes, tree, is_leaf=lambda x: isinstance(x, Param)
+        )
+
+
+def init_stacked(module: Module, key: jax.Array, n: int,
+                 stack_axis: str = "layers") -> PyTree:
+    """Initialise ``n`` copies of ``module`` with stacked leaves.
+
+    The resulting Param tree has a leading dimension of size ``n`` on every
+    leaf and logical axis ``stack_axis`` prepended, suitable for
+    ``jax.lax.scan`` over the layer stack.
+    """
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(module.init)(keys)
+    return map_params(
+        lambda p: Param(p.value, (stack_axis,) + tuple(p.axes)), stacked)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def variance_scaling(scale: float, mode: str, distribution: str,
+                     in_axis: int = -2, out_axis: int = -1):
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[in_axis] if shape else 1
+        fan_out = shape[out_axis] if shape else 1
+        if mode == "fan_in":
+            denom = max(1, fan_in)
+        elif mode == "fan_out":
+            denom = max(1, fan_out)
+        else:
+            denom = max(1, (fan_in + fan_out) / 2)
+        variance = scale / denom
+        if distribution == "truncated_normal":
+            stddev = jnp.sqrt(variance) / 0.87962566103423978
+            return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+        if distribution == "normal":
+            return jnp.sqrt(variance) * jax.random.normal(key, shape, dtype)
+        if distribution == "uniform":
+            lim = jnp.sqrt(3 * variance)
+            return jax.random.uniform(key, shape, dtype, -lim, lim)
+        raise ValueError(distribution)
+
+    return init
+
+
+lecun_normal = functools.partial(variance_scaling, 1.0, "fan_in", "truncated_normal")
+glorot_uniform = functools.partial(variance_scaling, 1.0, "fan_avg", "uniform")
+he_normal = functools.partial(variance_scaling, 2.0, "fan_in", "truncated_normal")
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return stddev * jax.random.normal(key, shape, dtype)
+
+    return init

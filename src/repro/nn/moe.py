@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN with static-shape capacity dispatch.
+
+TPU-native design: token->expert dispatch is a gather -> batched expert GEMM
+-> scatter, i.e. exactly the bipartite-graph message passing pattern of the
+TF-GNN data-exchange layer (tokens and experts are two "node sets", the
+routing assignment is an "edge set"; dispatch = broadcast, combine = pool).
+We reuse the same one-hot/cumsum position machinery as the graph kernels.
+
+  * positions-in-expert via cumsum over a [N, E] one-hot (N = T * top_k),
+  * capacity C rounded up to an MXU-friendly multiple,
+  * dispatch buffer [E, C, d] sharded over the "expert" logical axis (EP),
+  * combine via segment-sum back to tokens.
+
+Tokens overflowing capacity are dropped (GShard semantics); the auxiliary
+load-balance loss keeps drop rates low.  `capacity_factor` trades waste for
+drops and is a hillclimb knob.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, lecun_normal
+from repro.nn.layers import ACTIVATIONS, Linear, MLP
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+    drop_fraction: jnp.ndarray
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class MoELayer(Module):
+    """Top-k routed expert FFN (+ optional parallel dense residual MLP)."""
+
+    def __init__(self, dim: int, hidden: int, n_experts: int, top_k: int, *,
+                 capacity_factor: float = 1.25, capacity_multiple: int = 8,
+                 activation: str = "silu", gated: bool = True,
+                 dense_residual_hidden: int | None = None,
+                 normalize_gates: bool = True, n_groups: int = 16,
+                 name: str = "moe"):
+        self.n_groups = n_groups
+        self.dim = dim
+        self.hidden = hidden
+        self.n_experts = n_experts
+        self.top_k = top_k
+        self.capacity_factor = capacity_factor
+        self.capacity_multiple = capacity_multiple
+        self.act = ACTIVATIONS[activation]
+        self.gated = gated
+        self.normalize_gates = normalize_gates
+        self.router = Linear(dim, n_experts, use_bias=False,
+                             kernel_axes=("embed", None))
+        self.dense_residual = (
+            MLP(dim, dense_residual_hidden, activation=activation, gated=gated)
+            if dense_residual_hidden else None)
+        self.name = name
+
+    def init(self, key):
+        kr, ki, kg, ko, kd = jax.random.split(key, 5)
+        e, d, h = self.n_experts, self.dim, self.hidden
+        init = lecun_normal()
+
+        def stack(key, shape, axes):
+            keys = jax.random.split(key, e)
+            vals = jnp.stack([init(k, shape) for k in keys])
+            return Param(vals, ("expert",) + axes)
+
+        p = {
+            "router": self.router.init(kr),
+            "wi": stack(ki, (d, h), ("embed", "mlp")),
+            "wo": stack(ko, (h, d), ("mlp", "embed")),
+        }
+        if self.gated:
+            p["wg"] = stack(kg, (d, h), ("embed", "mlp"))
+        if self.dense_residual is not None:
+            p["dense"] = self.dense_residual.init(kd)
+        return p
+
+    def capacity(self, n_tokens: int) -> int:
+        c = math.ceil(n_tokens * self.top_k / self.n_experts
+                      * self.capacity_factor)
+        return max(self.capacity_multiple,
+                   _round_up(c, self.capacity_multiple))
+
+    def __call__(self, params, x) -> tuple[jnp.ndarray, MoEAux]:
+        """Grouped (GShard-style) dispatch: tokens are split into G groups
+        aligned with the data-parallel shards; positions-in-expert are
+        computed *group-locally* so the dispatch scatter is local to each
+        shard, and the group->expert reshard is the canonical MoE
+        all-to-all.  (A global cumsum/scatter would serialise across the
+        whole batch and materialise unsharded multi-GiB buffers — found on
+        the arctic-480b dry-run.)"""
+        from repro.distributed.sharding import shard_activation
+        orig_shape = x.shape
+        d = orig_shape[-1]
+        xt = x.reshape(-1, d)
+        t = xt.shape[0]
+        e, k = self.n_experts, self.top_k
+        g = self.n_groups
+        while t % g:
+            g //= 2
+        tg = t // g
+        cap = self.capacity(tg)
+        xg = shard_activation(xt.reshape(g, tg, d),
+                              ("moe_group", None, None))
+
+        # --- routing -----------------------------------------------------
+        # router matmul in compute dtype (an fp32 copy of the whole
+        # activation would cost GiBs at 1M-token prefill); softmax in fp32.
+        router_logits = self.router(params["router"], xg).astype(jnp.float32)
+        probs = jax.nn.softmax(router_logits, axis=-1)  # [G, Tg, E]
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)  # [G, Tg, k]
+        if self.normalize_gates:
+            gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+        # --- group-local position-in-expert -------------------------------
+        flat_expert = expert_ids.reshape(g, tg * k)
+        onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # [G,N,E]
+        pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1   # [G,N]
+        keep = pos < cap
+        slots = jnp.where(keep, flat_expert * cap + pos, e * cap)  # OOB=drop
+        token_ids = jnp.repeat(jnp.arange(tg), k)  # [N] within group
+
+        # --- dispatch (group-local scatter) --------------------------------
+        gathered = jnp.take(xg, token_ids, axis=1)  # [G, N, d]
+        gathered = jnp.where(keep[..., None], gathered, 0)
+        buf = jax.vmap(
+            lambda b, s, v: b.at[s].set(v, mode="drop"))(
+                jnp.zeros((g, e * cap, d), xt.dtype), slots, gathered)
+        buf = buf.reshape(g, e, cap, d)
+        # group->expert reshard: THE MoE all-to-all (groups live on "data",
+        # experts on "model")
+        buf = shard_activation(buf, ("moe_group", "expert", None, None))
+
+        # --- expert compute (EP over the expert dim) -----------------------
+        wi = params["wi"].astype(xt.dtype)
+        wo = params["wo"].astype(xt.dtype)
+        h = jnp.einsum("gecd,edh->gech", buf, wi)
+        if self.gated:
+            wg = params["wg"].astype(xt.dtype)
+            h = self.act(jnp.einsum("gecd,edh->gech", buf, wg)) * h
+        else:
+            h = self.act(h)
+        h = shard_activation(h, ("moe_group", "expert", None, "mlp"))
+        out = jnp.einsum("gech,ehd->gecd", h, wo)
+        out = shard_activation(out, ("moe_group", "expert", None, None))
+        out = out.reshape(g, e * cap, d)
+
+        # --- combine (group-local gather + segment sum) --------------------
+        picked = jax.vmap(
+            lambda o, s: jnp.take(o, jnp.minimum(s, e * cap - 1), axis=0))(
+                out, slots)  # [G, N, d]
+        weight = (gate_vals.reshape(g, -1) * keep).astype(xt.dtype)
+        y = jax.vmap(lambda p, tid: jax.ops.segment_sum(
+            p, tid, num_segments=tg))(picked * weight[..., None],
+                                      jnp.broadcast_to(token_ids, (g, tg * k)))
+        y = shard_activation(y, ("moe_group", None, None)).reshape(t, d)
+
+        if self.dense_residual is not None:
+            y = y + self.dense_residual(params["dense"], xt)
+
+        # --- aux losses ----------------------------------------------------
+        me = probs.mean(axis=(0, 1))  # [E] mean router prob
+        ce = (onehot.sum((0, 1)) / max(t * k, 1)).astype(jnp.float32)
+        lb_loss = e * jnp.sum(me * ce)
+        z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(router_logits, -1)))
+        dropped = 1.0 - keep.mean()
+        aux = MoEAux(lb_loss, z_loss, dropped)
+        return y.reshape(orig_shape).astype(x.dtype), aux

@@ -1,0 +1,388 @@
+"""State-space / linear-recurrence cells: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented twice:
+  * a *chunked parallel* form for training/prefill — intra-chunk work is
+    MXU-shaped matmuls, inter-chunk state is carried by a `lax.scan`
+    (this is the TPU-native adaptation of the CUDA scan kernels);
+  * an O(1)-state *recurrent step* for decode (long_500k shape).
+
+Numerics: decays and softmax-ish reductions in fp32; chunk length kept at
+128 so cumulative decay products stay in fp32 range.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, lecun_normal, normal_init
+from repro.nn.layers import Linear, LayerNorm
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+class Mamba2State(NamedTuple):
+    ssm: jnp.ndarray      # [B, H, P, N]
+    conv: jnp.ndarray     # [B, K-1, conv_dim] rolling conv buffer
+
+
+class Mamba2(Module):
+    """Mamba2 block (SSD, scalar-A-per-head, groups=1)."""
+
+    def __init__(self, d_model: int, *, d_state: int = 64, head_dim: int = 64,
+                 expand: int = 2, conv_kernel: int = 4, chunk: int = 128,
+                 name: str = "mamba2"):
+        self.d_model = d_model
+        self.d_inner = expand * d_model
+        self.d_state = d_state
+        self.head_dim = head_dim
+        self.n_heads = self.d_inner // head_dim
+        self.conv_kernel = conv_kernel
+        self.chunk = chunk
+        # in_proj emits [z (gate), x, B, C, dt]
+        self.proj_dims = (self.d_inner, self.d_inner, d_state, d_state,
+                          self.n_heads)
+        self.in_proj = Linear(d_model, sum(self.proj_dims), use_bias=False,
+                              kernel_axes=("embed", "mlp"))
+        self.out_proj = Linear(self.d_inner, d_model, use_bias=False,
+                               kernel_axes=("mlp", "embed"))
+        self.conv_dim = self.d_inner + 2 * d_state
+        self.name = name
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        h = self.n_heads
+        return {
+            "in_proj": self.in_proj.init(k1),
+            "out_proj": self.out_proj.init(k2),
+            "conv_w": Param(
+                normal_init(0.1)(k3, (self.conv_kernel, self.conv_dim)),
+                (None, "mlp")),
+            "conv_b": Param(jnp.zeros((self.conv_dim,)), ("mlp",)),
+            "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, h)), (None,)),
+            "D": Param(jnp.ones((h,)), (None,)),
+            "dt_bias": Param(jnp.zeros((h,)), (None,)),
+            "norm": LayerNorm(self.d_inner, use_bias=False).init(k4),
+        }
+
+    # -- helpers ------------------------------------------------------------
+
+    def _split_proj(self, proj):
+        sizes = self.proj_dims
+        idx = [sum(sizes[:i]) for i in range(1, len(sizes))]
+        return jnp.split(proj, idx, axis=-1)
+
+    def _conv(self, xbc, conv_state, params):
+        """Causal depthwise conv over time. xbc: [B, S, conv_dim]."""
+        w = params["conv_w"].astype(xbc.dtype)  # [K, C]
+        k = self.conv_kernel
+        padded = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        out = sum(padded[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+        out = jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+        new_state = (padded[:, -(k - 1):].astype(conv_state.dtype)
+                     if k > 1 else conv_state)
+        return out, new_state
+
+    def _gated_norm(self, params, y, z):
+        y = LayerNorm(self.d_inner, use_bias=False)(params["norm"], y)
+        return y * jax.nn.silu(z)
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> Mamba2State:
+        return Mamba2State(
+            ssm=jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state),
+                          dtype),
+            conv=jnp.zeros((batch, self.conv_kernel - 1, self.conv_dim),
+                           dtype))
+
+    # -- chunked parallel (train / prefill) ---------------------------------
+
+    def __call__(self, params, x, state: Mamba2State | None = None):
+        """x: [B, S, d_model] with S % chunk == 0 (pad upstream)."""
+        b, s, _ = x.shape
+        if state is None:
+            state = self.init_state(b, jnp.float32)
+        proj = self.in_proj(params["in_proj"], x)
+        z, xr, bmat, cmat, dt = self._split_proj(proj)
+        xbc = jnp.concatenate([xr, bmat, cmat], axis=-1)
+        xbc, conv_state = self._conv(xbc, state.conv, params)
+        xr = xbc[..., :self.d_inner]
+        bmat = xbc[..., self.d_inner:self.d_inner + self.d_state]
+        cmat = xbc[..., self.d_inner + self.d_state:]
+
+        h, p, n = self.n_heads, self.head_dim, self.d_state
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H]
+        xh = xr.reshape(b, s, h, p).astype(jnp.float32)
+
+        l = min(self.chunk, s)
+        while s % l:
+            l -= 1
+        nc = s // l
+        xc = xh.reshape(b, nc, l, h, p)
+        dtc = dt.reshape(b, nc, l, h)
+        bc = bmat.reshape(b, nc, l, n).astype(jnp.float32)
+        cc = cmat.reshape(b, nc, l, n).astype(jnp.float32)
+
+        def chunk_step(ssm, inp):
+            xck, dtk, bk, ck = inp  # [B,l,h,p], [B,l,h], [B,l,n], [B,l,n]
+            la = dtk * a  # [B,l,h] log decay per step (negative)
+            lcum = jnp.cumsum(la, axis=1)  # inclusive [B,l,h]
+            # intra-chunk: M[t,s] = (C_t . B_s) * exp(lcum_t - lcum_s) * dt_s
+            cb = jnp.einsum("btn,bsn->bts", ck, bk)  # [B,l,l]
+            tril = jnp.tril(jnp.ones((l, l), bool))
+            # mask exponent BEFORE exp: masked entries have lcum_t - lcum_s > 0
+            # and would overflow, poisoning gradients through the where.
+            delta = jnp.where(tril[None, :, :, None],
+                              lcum[:, :, None, :] - lcum[:, None, :, :], -1e30)
+            m = cb[..., None] * jnp.exp(delta)
+            m = m * dtk[:, None, :, :]  # weight by dt_s
+            y_intra = jnp.einsum("btsh,bshp->bthp", m, xck)
+            # inter-chunk: y_inter[t] = C_t . (exp(lcum_t) ssm_prev)
+            y_inter = jnp.einsum("btn,bhpn,bth->bthp", ck, ssm,
+                                 jnp.exp(lcum))
+            # state update
+            rem = jnp.exp(lcum[:, -1:, :] - lcum)  # decay from s to end
+            upd = jnp.einsum("bshp,bsn,bsh->bhpn", xck, bk, rem * dtk)
+            ssm_new = ssm * jnp.exp(lcum[:, -1])[..., None, None] + upd
+            return ssm_new, y_intra + y_inter
+
+        def scan_inp(t):
+            return jnp.moveaxis(t, 1, 0)  # [nc, B, ...]
+
+        ssm_final, ys = jax.lax.scan(
+            chunk_step, state.ssm,
+            (scan_inp(xc), scan_inp(dtc), scan_inp(bc), scan_inp(cc)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+        y = y + xh * params["D"].astype(jnp.float32)[None, None, :, None]
+        y = y.reshape(b, s, self.d_inner).astype(x.dtype)
+        y = self._gated_norm(params, y, z)
+        out = self.out_proj(params["out_proj"], y)
+        return out, Mamba2State(ssm_final, conv_state)
+
+    # -- recurrent decode -----------------------------------------------------
+
+    def decode_step(self, params, x, state: Mamba2State):
+        """x: [B, 1, d_model] -> ([B, 1, d_model], state)."""
+        b = x.shape[0]
+        proj = self.in_proj(params["in_proj"], x)
+        z, xr, bmat, cmat, dt = self._split_proj(proj)
+        xbc = jnp.concatenate([xr, bmat, cmat], axis=-1)
+        xbc, conv_state = self._conv(xbc, state.conv, params)
+        h, p, n = self.n_heads, self.head_dim, self.d_state
+        xr = xbc[..., :self.d_inner].reshape(b, h, p).astype(jnp.float32)
+        bv = xbc[..., self.d_inner:self.d_inner + n].reshape(b, n)
+        cv = xbc[..., self.d_inner + n:].reshape(b, n)
+        dt = jax.nn.softplus(dt.astype(jnp.float32)[:, 0]
+                             + params["dt_bias"].astype(jnp.float32))  # [B,H]
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))
+        decay = jnp.exp(dt * a)  # [B,H]
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xr, bv.astype(jnp.float32), dt)
+        ssm = state.ssm * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cv.astype(jnp.float32), ssm)
+        y = y + xr * params["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(b, 1, self.d_inner).astype(x.dtype)
+        y = self._gated_norm(params, y, z)
+        return self.out_proj(params["out_proj"], y), Mamba2State(ssm, conv_state)
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+class RWKV6State(NamedTuple):
+    shift_tm: jnp.ndarray  # [B, d] last token (time-mix shift)
+    shift_cm: jnp.ndarray  # [B, d] last token (channel-mix shift)
+    wkv: jnp.ndarray       # [B, H, dk, dv] linear-attention state
+
+
+class RWKV6TimeMix(Module):
+    """RWKV6 time-mix with data-dependent decay (the Finch contribution)."""
+
+    MIX = ("r", "k", "v", "g", "w")
+
+    # chunk=16 with per-step log-decay clipped to >= -5 bounds the factored
+    # intra-chunk exponent |lexc_t - lcum_s| <= 80 < log(fp32 max) ~ 88.
+    def __init__(self, d_model: int, *, head_dim: int = 64,
+                 lora_mix: int = 32, lora_decay: int = 64, chunk: int = 16,
+                 name: str = "time_mix"):
+        self.d = d_model
+        self.head_dim = head_dim
+        self.n_heads = d_model // head_dim
+        self.lora_mix = lora_mix
+        self.lora_decay = lora_decay
+        self.chunk = chunk
+        self.name = name
+        ax = ("embed", "heads")
+        self.wr = Linear(d_model, d_model, use_bias=False, kernel_axes=ax)
+        self.wk = Linear(d_model, d_model, use_bias=False, kernel_axes=ax)
+        self.wv = Linear(d_model, d_model, use_bias=False, kernel_axes=ax)
+        self.wg = Linear(d_model, d_model, use_bias=False, kernel_axes=ax)
+        self.wo = Linear(d_model, d_model, use_bias=False,
+                         kernel_axes=("heads", "embed"))
+
+    def init(self, key):
+        ks = jax.random.split(key, 10)
+        d, m = self.d, self.lora_mix
+        init = normal_init(0.02)
+        return {
+            "mu_x": Param(jnp.zeros((d,)), ("embed",)),
+            "mu": Param(jnp.zeros((5, d)), (None, "embed")),
+            # fused mixing LoRA: 5 projections
+            "mix_a": Param(init(ks[0], (d, 5 * m)), ("embed", None)),
+            "mix_b": Param(init(ks[1], (5, m, d)), (None, None, "embed")),
+            # decay LoRA
+            "dec_a": Param(init(ks[2], (d, self.lora_decay)), ("embed", None)),
+            "dec_b": Param(init(ks[3], (self.lora_decay, d)), (None, "embed")),
+            "dec_base": Param(jnp.linspace(-6.0, -0.5, d), ("embed",)),
+            "bonus_u": Param(jnp.zeros((self.n_heads, self.head_dim)),
+                             (None, None)),
+            "r": self.wr.init(ks[4]), "k": self.wk.init(ks[5]),
+            "v": self.wv.init(ks[6]), "g": self.wg.init(ks[7]),
+            "o": self.wo.init(ks[8]),
+            "ln_x": LayerNorm(d).init(ks[9]),  # per-head group norm
+        }
+
+    def _mix(self, params, x, x_prev):
+        """Token-shift ddlerp -> (xr, xk, xv, xg, xw). x: [B,S,d]."""
+        xx = x_prev - x
+        xxx = x + xx * params["mu_x"].astype(x.dtype)
+        m = self.lora_mix
+        lora = jnp.tanh(jnp.matmul(xxx, params["mix_a"].astype(x.dtype)))
+        lora = lora.reshape(*x.shape[:-1], 5, m)
+        delta = jnp.einsum("...fm,fmd->...fd", lora,
+                           params["mix_b"].astype(x.dtype))
+        mu = params["mu"].astype(x.dtype) + delta  # [...,5,d]
+        return tuple(x + xx * mu[..., i, :] for i in range(5))
+
+    def _decay(self, params, xw):
+        """Per-channel decay in (0,1): w = exp(-exp(base + lora(xw)))."""
+        lw = jnp.matmul(jnp.tanh(jnp.matmul(xw.astype(jnp.float32),
+                                            params["dec_a"].astype(jnp.float32))),
+                        params["dec_b"].astype(jnp.float32))
+        logw = -jnp.exp(jnp.clip(params["dec_base"].astype(jnp.float32) + lw,
+                                 -20.0, 1.609))  # log-decay in [-5, ~0)
+        return logw  # negative [B,S,d]
+
+    def _proj_heads(self, params, xr, xk, xv, xg):
+        b, s, _ = xr.shape
+        h, p = self.n_heads, self.head_dim
+        r = self.wr(params["r"], xr).reshape(b, s, h, p)
+        k = self.wk(params["k"], xk).reshape(b, s, h, p)
+        v = self.wv(params["v"], xv).reshape(b, s, h, p)
+        g = jax.nn.silu(self.wg(params["g"], xg))
+        return r, k, v, g
+
+    def _out(self, params, wkv_out, g, b, s):
+        y = wkv_out.reshape(b, s, self.d)
+        y = LayerNorm(self.d)(params["ln_x"], y)
+        return self.wo(params["o"], (y * g).astype(g.dtype))
+
+    def init_state(self, batch, dtype=jnp.float32):
+        return (jnp.zeros((batch, self.d), dtype),
+                jnp.zeros((batch, self.n_heads, self.head_dim, self.head_dim),
+                          jnp.float32))
+
+    def __call__(self, params, x, shift_prev, wkv_prev):
+        """Chunked-parallel form. x: [B, S, d], S % chunk == 0."""
+        b, s, _ = x.shape
+        h, p = self.n_heads, self.head_dim
+        x_prev = jnp.concatenate(
+            [shift_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+        xr, xk, xv, xg, xw = self._mix(params, x, x_prev)
+        r, k, v, g = self._proj_heads(params, xr, xk, xv, xg)
+        logw = self._decay(params, xw).reshape(b, s, h, p)  # [B,S,H,dk]
+        u = params["bonus_u"].astype(jnp.float32)  # [H, dk]
+
+        l = min(self.chunk, s)
+        while s % l:
+            l -= 1
+        nc = s // l
+        rf = r.reshape(b, nc, l, h, p).astype(jnp.float32)
+        kf = k.reshape(b, nc, l, h, p).astype(jnp.float32)
+        vf = v.reshape(b, nc, l, h, p).astype(jnp.float32)
+        wf = logw.reshape(b, nc, l, h, p)
+
+        def chunk_step(s_prev, inp):
+            rk, kk, vk, wk = inp  # [B,l,H,p]
+            lcum = jnp.cumsum(wk, axis=1)          # inclusive log decay
+            lexc = lcum - wk                       # exclusive
+            r_t = rk * jnp.exp(lexc)               # r~
+            k_s = kk * jnp.exp(-lcum)              # k~  (divide by inclusive)
+            att = jnp.einsum("bthd,bshd->bhts", r_t, k_s)
+            att = jnp.where(jnp.tril(jnp.ones((l, l), bool), -1)[None, None],
+                            att, 0.0)
+            y = jnp.einsum("bhts,bshd->bthd", att, vk)
+            # bonus current-token term
+            y = y + jnp.einsum("bthd,hd,bthd->bth", rk, u, kk)[..., None] * vk
+            # inter-chunk
+            y = y + jnp.einsum("bthd,bhde->bthe", r_t, s_prev)
+            # state update: S_new = diag(exp(lcum_L)) S + sum_s exp(lcum_L-lcum_s) k_s v_s^T
+            dec_end = jnp.exp(lcum[:, -1:] - lcum)  # [B,l,H,p]
+            s_new = (s_prev * jnp.exp(lcum[:, -1])[..., None]
+                     + jnp.einsum("bshd,bshe->bhde", kk * dec_end, vk))
+            return s_new, y
+
+        def scan_inp(t):
+            return jnp.moveaxis(t, 1, 0)
+
+        wkv_final, ys = jax.lax.scan(
+            chunk_step, wkv_prev.astype(jnp.float32),
+            (scan_inp(rf), scan_inp(kf), scan_inp(vf), scan_inp(wf)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p).astype(x.dtype)
+        out = self._out(params, y, g, b, s)
+        # keep state dtypes stable for scan carries
+        return out, x[:, -1].astype(shift_prev.dtype), wkv_final
+
+    def decode_step(self, params, x, shift_prev, wkv_prev):
+        """x: [B, 1, d]."""
+        b = x.shape[0]
+        h, p = self.n_heads, self.head_dim
+        x_prev = shift_prev[:, None].astype(x.dtype)
+        xr, xk, xv, xg, xw = self._mix(params, x, x_prev)
+        r, k, v, g = self._proj_heads(params, xr, xk, xv, xg)
+        logw = self._decay(params, xw).reshape(b, h, p)
+        u = params["bonus_u"].astype(jnp.float32)
+        r1 = r[:, 0].astype(jnp.float32)
+        k1 = k[:, 0].astype(jnp.float32)
+        v1 = v[:, 0].astype(jnp.float32)
+        kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+        y = jnp.einsum("bhd,bhde->bhe", r1, wkv_prev + u[None, :, :, None] * kv)
+        wkv_new = wkv_prev * jnp.exp(logw)[..., None] + kv
+        out = self._out(params, y[:, None], g, b, 1)
+        return out, x[:, -1].astype(shift_prev.dtype), wkv_new
+
+
+class RWKV6ChannelMix(Module):
+    def __init__(self, d_model: int, hidden: int, name: str = "channel_mix"):
+        self.d = d_model
+        self.hidden = hidden
+        self.wk = Linear(d_model, hidden, use_bias=False,
+                         kernel_axes=("embed", "mlp"))
+        self.wv = Linear(hidden, d_model, use_bias=False,
+                         kernel_axes=("mlp", "embed"))
+        self.wr = Linear(d_model, d_model, use_bias=False,
+                         kernel_axes=("embed", "mlp"))
+        self.name = name
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "mu_k": Param(jnp.full((self.d,), 0.5), ("embed",)),
+            "mu_r": Param(jnp.full((self.d,), 0.5), ("embed",)),
+            "k": self.wk.init(k1), "v": self.wv.init(k2),
+            "r": self.wr.init(k3),
+        }
+
+    def __call__(self, params, x, shift_prev):
+        x_prev = jnp.concatenate(
+            [shift_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+        xx = x_prev - x
+        xk = x + xx * params["mu_k"].astype(x.dtype)
+        xr = x + xx * params["mu_r"].astype(x.dtype)
+        kk = jnp.square(jax.nn.relu(self.wk(params["k"], xk)))
+        out = jax.nn.sigmoid(self.wr(params["r"], xr)) * self.wv(params["v"], kk)
+        return out, x[:, -1].astype(shift_prev.dtype)

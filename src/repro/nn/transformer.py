@@ -1,0 +1,329 @@
+"""Decoder-only LM assembly (dense + MoE + parallel-block variants).
+
+Layers are stacked with `init_stacked` and iterated with `jax.lax.scan`, so
+HLO size and compile time are O(1) in depth — essential for the 512-device
+dry-run on this container and good practice at scale anyway.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.nn.attention import Attention, KVCache
+from repro.nn.layers import Embedding, LayerNorm, Linear, MLP, RMSNorm
+from repro.nn.module import Module, init_stacked, split_params
+from repro.nn.moe import MoEAux, MoELayer
+
+
+def maybe_remat(body, cfg: ArchConfig):
+    """Wrap a scanned layer body with activation checkpointing."""
+    if cfg.remat == "layer":
+        return jax.checkpoint(body)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return body
+
+
+def layer_axes_of(module: Module):
+    """Per-layer logical axes of a block module (no 'layers' prefix)."""
+    from repro.nn.module import Param
+    tree = jax.eval_shape(module.init, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map(
+        lambda p: p.axes, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _grad_dtype_barrier_for(dtype_name: str):
+    dtype = jnp.dtype(dtype_name)
+
+    @jax.custom_vjp
+    def barrier(w):
+        return w
+
+    barrier.defvjp(lambda w: (w, None),
+                   lambda _, ct: (ct.astype(dtype),))
+    return barrier
+
+
+def _grad_dtype_barrier(w):
+    return _grad_dtype_barrier_for(str(w.dtype))(w)
+
+
+def constrain_layer_params(layer_params, axes):
+    """Prepare a scanned layer's param slice: sharding constraint + gradient
+    dtype barrier.
+
+    Both matter for memory at scale (found via the arctic-480b dry-run):
+      * the constraint's transpose reduce-scatters per-layer weight grads
+        into the sharded layout inside the backward while-loop;
+      * the dtype barrier casts each layer's weight cotangent back to the
+        param dtype BEFORE the scan transpose stacks it — otherwise the
+        stacked gradient accumulator is carried at fp32 width (cotangents
+        inherit the fp32 loss dtype through linear ops), doubling/4x-ing
+        the dominant training buffer for bf16-param models.
+    """
+    from repro.distributed.sharding import constrain_tree
+    layer_params = jax.tree_util.tree_map(_grad_dtype_barrier, layer_params)
+    return constrain_tree(layer_params, axes, kind="param")
+
+
+def make_norm(cfg: ArchConfig, dim: int | None = None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return RMSNorm(dim)
+    return LayerNorm(dim)
+
+
+def zero_aux() -> dict[str, jnp.ndarray]:
+    z = jnp.zeros((), jnp.float32)
+    return {"moe_lb_loss": z, "moe_z_loss": z, "moe_drop_fraction": z}
+
+
+class DecoderBlock(Module):
+    """Pre-norm transformer block; sequential or parallel (command-r)."""
+
+    def __init__(self, cfg: ArchConfig, *, causal: bool = True,
+                 rope: bool = True):
+        self.cfg = cfg
+        self.attn = Attention(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, out_bias=cfg.out_bias, rope=rope,
+            rope_theta=cfg.rope_theta, causal=causal,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            skip_masked_chunks=cfg.skip_masked_chunks)
+        if cfg.moe is not None:
+            self.ffn = MoELayer(
+                cfg.d_model, cfg.moe.expert_d_ff, cfg.moe.n_experts,
+                cfg.moe.top_k, capacity_factor=cfg.moe.capacity_factor,
+                activation=cfg.activation, gated=cfg.gated_mlp,
+                dense_residual_hidden=cfg.moe.dense_residual_ff or None)
+        else:
+            self.ffn = MLP(cfg.d_model, cfg.d_ff, activation=cfg.activation,
+                           gated=cfg.gated_mlp)
+        self.norm1 = make_norm(cfg)
+        self.norm2 = None if cfg.parallel_block else make_norm(cfg)
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"attn": self.attn.init(k1), "ffn": self.ffn.init(k2),
+             "norm1": self.norm1.init(k3)}
+        if self.norm2 is not None:
+            p["norm2"] = self.norm2.init(k4)
+        return p
+
+    def _ffn(self, params, x):
+        if isinstance(self.ffn, MoELayer):
+            y, aux = self.ffn(params["ffn"], x)
+            return y, {"moe_lb_loss": aux.load_balance_loss,
+                       "moe_z_loss": aux.router_z_loss,
+                       "moe_drop_fraction": aux.drop_fraction}
+        return self.ffn(params["ffn"], x), zero_aux()
+
+    def __call__(self, params, x, *, positions=None):
+        if self.cfg.parallel_block:
+            h = self.norm1(params["norm1"], x)
+            attn_out = self.attn(params["attn"], h, positions=positions)
+            ffn_out, aux = self._ffn(params, h)
+            x = x + attn_out + ffn_out
+        else:
+            h = self.norm1(params["norm1"], x)
+            x = x + self.attn(params["attn"], h, positions=positions)
+            h = self.norm2(params["norm2"], x)
+            ffn_out, aux = self._ffn(params, h)
+            x = x + ffn_out
+        x = shard_activation(x, ("batch", "seq", None))
+        return x, aux
+
+    def prefill(self, params, x, *, positions=None):
+        """Like __call__ but also returns this layer's (k, v)."""
+        h = self.norm1(params["norm1"], x)
+        b, s, _ = h.shape
+        q, k, v = self.attn._project(params["attn"], h, positions
+                                     if positions is not None else
+                                     jnp.broadcast_to(jnp.arange(s)[None],
+                                                      (b, s)))
+        attn_inner = self.attn  # reuse chunked path on projected qkv
+        from repro.nn.attention import chunked_gqa_attention, gqa_attention, causal_mask
+        if max(s, s) >= attn_inner.chunk_threshold:
+            out = chunked_gqa_attention(
+                q, k, v, causal=True, q_chunk=attn_inner.q_chunk,
+                kv_chunk=attn_inner.kv_chunk,
+                skip_masked_chunks=attn_inner.skip_masked_chunks)
+        else:
+            out = gqa_attention(q, k, v, causal_mask(s, s, 0))
+        attn_out = attn_inner.wo(params["attn"]["wo"], out.reshape(b, s, -1))
+        if self.cfg.parallel_block:
+            ffn_out, aux = self._ffn(params, h)
+            x = x + attn_out + ffn_out
+        else:
+            x = x + attn_out
+            h2 = self.norm2(params["norm2"], x)
+            ffn_out, aux = self._ffn(params, h2)
+            x = x + ffn_out
+        return x, (k, v), aux
+
+    def decode(self, params, x, cache: KVCache, *, positions=None):
+        h = self.norm1(params["norm1"], x)
+        attn_out, cache = self.attn.decode_step(params["attn"], h, cache,
+                                                positions=positions)
+        if self.cfg.parallel_block:
+            ffn_out, aux = self._ffn(params, h)
+            x = x + attn_out + ffn_out
+        else:
+            x = x + attn_out
+            h2 = self.norm2(params["norm2"], x)
+            ffn_out, aux = self._ffn(params, h2)
+            x = x + ffn_out
+        return x, cache, aux
+
+
+class LMOutput(NamedTuple):
+    logits: jnp.ndarray
+    aux: dict[str, jnp.ndarray]
+
+
+class DecoderLM(Module):
+    """Token-in logits-out decoder LM with scanned layer stack.
+
+    Also the backbone for phi-3-vision: `patch_embeds` (stub CLIP output,
+    [B, P, d_model]) are prepended to the token embeddings.
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.embed = Embedding(cfg.vocab_size, cfg.d_model)
+        self.block = DecoderBlock(cfg)
+        self.final_norm = make_norm(cfg)
+        self.lm_head = None
+        if not cfg.tie_embeddings:
+            self.lm_head = Linear(cfg.d_model, cfg.vocab_size, use_bias=False,
+                                  kernel_axes=("embed", "vocab"))
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "embed": self.embed.init(k1),
+            "blocks": init_stacked(self.block, k2, self.cfg.num_layers),
+            "final_norm": self.final_norm.init(k3),
+        }
+        if self.lm_head is not None:
+            p["lm_head"] = self.lm_head.init(k4)
+        return p
+
+    # ---- shared pieces -----------------------------------------------------
+
+    def _embed_inputs(self, params, tokens, patch_embeds=None):
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        x = self.embed(params["embed"], tokens, dtype=dtype)
+        if self.cfg.num_patches and patch_embeds is not None:
+            # vlm: prepend stub-CLIP patch embeddings (absent during decode —
+            # they were consumed at prefill and live in the KV cache)
+            x = jnp.concatenate([patch_embeds.astype(dtype), x], axis=1)
+        return shard_activation(x, ("batch", "seq", None))
+
+    def _logits(self, params, x):
+        x = self.final_norm(params["final_norm"], x)
+        if self.lm_head is not None:
+            logits = self.lm_head(params["lm_head"], x)
+        else:
+            logits = self.embed.attend(params["embed"], x)
+        logits = shard_activation(logits, ("batch", None, "vocab"))
+        return logits.astype(jnp.float32)
+
+    # ---- full sequence (train) ----------------------------------------------
+
+    def backbone(self, params, tokens, *, patch_embeds=None):
+        """Full-sequence forward up to (but excluding) the softmax head.
+        Returns ([B, S, d] hidden states, aux)."""
+        x = self._embed_inputs(params, tokens, patch_embeds)
+        block_axes = layer_axes_of(self.block)
+
+        def body(carry, layer_params):
+            x = carry
+            layer_params = constrain_layer_params(layer_params, block_axes)
+            x, aux = self.block(layer_params, x)
+            return x, aux
+
+        body = maybe_remat(body, self.cfg)
+        x, auxes = jax.lax.scan(body, x, params["blocks"])
+        aux = {k: v.sum() for k, v in auxes.items()}
+        if self.cfg.num_patches:
+            x = x[:, self.cfg.num_patches:]
+        return x, aux
+
+    def apply_head(self, params, x):
+        """Final norm + logits for a (possibly chunked) slice of positions."""
+        return self._logits(params, x)
+
+    def __call__(self, params, tokens, *, patch_embeds=None) -> LMOutput:
+        x, aux = self.backbone(params, tokens, patch_embeds=patch_embeds)
+        return LMOutput(self.apply_head(params, x), aux)
+
+    # ---- prefill -------------------------------------------------------------
+
+    def prefill(self, params, tokens, max_len: int | None = None,
+                *, patch_embeds=None) -> tuple[LMOutput, KVCache]:
+        x = self._embed_inputs(params, tokens, patch_embeds)
+        b, s, _ = x.shape
+
+        def body(carry, layer_params):
+            x = carry
+            x, (k, v), aux = self.block.prefill(layer_params, x)
+            return x, (k, v, aux)
+
+        x, (ks, vs, auxes) = jax.lax.scan(body, x, params["blocks"])
+        aux = {k: v.sum() for k, v in auxes.items()}
+        max_len = max_len or s
+        dtype = self.kv_dtype()
+        if max_len > s:
+            pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            ks = jnp.pad(ks.astype(dtype), pad)
+            vs = jnp.pad(vs.astype(dtype), pad)
+        else:
+            ks, vs = ks.astype(dtype), vs.astype(dtype)
+        cache = KVCache(ks, vs, jnp.asarray(s, jnp.int32))
+        if self.cfg.num_patches:
+            x = x[:, self.cfg.num_patches:]
+        return LMOutput(self._logits(params, x[:, -1:]), aux), cache
+
+    def kv_dtype(self):
+        return jnp.dtype(self.cfg.kv_cache_dtype or self.cfg.compute_dtype)
+
+    def init_cache(self, batch: int, max_len: int) -> KVCache:
+        cfg = self.cfg
+        return KVCache.zeros(batch, max_len, cfg.n_kv_heads,
+                             cfg.resolved_head_dim,
+                             dtype=self.kv_dtype(),
+                             layers=cfg.num_layers)
+
+    def cache_axes(self) -> KVCache:
+        kv = ("layers", "batch", "seq", "kv_heads", None)
+        return KVCache(kv, kv, ())
+
+    # ---- decode ---------------------------------------------------------------
+
+    def decode_step(self, params, tokens, cache: KVCache) -> tuple[LMOutput, KVCache]:
+        """tokens: [B, S_new] (usually S_new == 1)."""
+        x = self._embed_inputs(params, tokens)
+
+        def body(carry, inp):
+            x = carry
+            layer_params, k_l, v_l = inp
+            layer_cache = KVCache(k_l, v_l, cache.length)
+            x, new_cache, aux = self.block.decode(layer_params, x, layer_cache)
+            return x, (new_cache.k, new_cache.v, aux)
+
+        x, (ks, vs, auxes) = jax.lax.scan(
+            body, x, (params["blocks"], cache.k, cache.v))
+        aux = {k: v.sum() for k, v in auxes.items()}
+        new_cache = KVCache(ks, vs, cache.length + tokens.shape[1])
+        return LMOutput(self._logits(params, x), aux), new_cache

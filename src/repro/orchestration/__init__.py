@@ -1,0 +1,3 @@
+from repro.orchestration.runner import (  # noqa
+    GraphBinaryClassification, RootNodeMulticlassClassification, RunResult,
+    Task, run)

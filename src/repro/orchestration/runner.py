@@ -1,0 +1,242 @@
+"""API Level 4 — the Orchestrator (paper §5 / §8.4).
+
+Composable pieces mirroring the paper's runner:
+
+  DatasetProvider  -> GraphTensor stream (+ schema)
+  Task             -> adapts a base GNN to an objective (readout + loss)
+  Trainer          -> optimization loop w/ checkpointing + validation
+  run(...)         -> wires them together
+
+Minimal-code experience: see examples/ogbn_mag_train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph_tensor import GraphTensor, HIDDEN_STATE
+from repro.core import ops
+from repro.distributed.fault_tolerance import CheckpointManager
+from repro.nn.module import Module, split_params
+from repro.nn.layers import Linear
+from repro.train.optimizer import AdamW, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# Tasks
+# ---------------------------------------------------------------------------
+
+class Task:
+    """Adapts model output (a GraphTensor) to an objective."""
+
+    def head(self) -> Module:  # trainable readout head
+        raise NotImplementedError
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def loss(self, logits, labels, weights) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class RootNodeMulticlassClassification(Task):
+    """Paper §8.4: classify the root node (index 0 of each component) of a
+    sampled subgraph.  Labels: [C] int32 per component; padding components
+    carry weight 0 via context.sizes."""
+
+    def __init__(self, node_set_name: str, num_classes: int,
+                 hidden_dim: int):
+        self.node_set_name = node_set_name
+        self.num_classes = num_classes
+        self.hidden_dim = hidden_dim
+
+    def head(self) -> Module:
+        return Linear(self.hidden_dim, self.num_classes)
+
+    def root_states(self, graph: GraphTensor) -> jnp.ndarray:
+        """Hidden state of each component's root = first node (the sampler
+        puts the seed first; see repro.data.sampling)."""
+        ns = graph.node_sets[self.node_set_name]
+        sizes = ns.sizes
+        starts = jnp.concatenate([jnp.zeros(1, sizes.dtype),
+                                  jnp.cumsum(sizes)[:-1]])
+        return jnp.take(ns[HIDDEN_STATE],
+                        jnp.minimum(starts, ns.capacity - 1), axis=0)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        return Linear(self.hidden_dim, self.num_classes)(
+            head_params, self.root_states(graph))
+
+    def loss(self, logits, labels, weights):
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        nll = (logz - ll) * weights
+        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+class GraphBinaryClassification(Task):
+    """Graph-level binary objective via mean-pooled node states."""
+
+    def __init__(self, node_set_name: str, hidden_dim: int):
+        self.node_set_name = node_set_name
+        self.hidden_dim = hidden_dim
+
+    def head(self) -> Module:
+        return Linear(self.hidden_dim, 1)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        pooled = ops.pool_nodes_to_context(
+            graph, self.node_set_name, "mean", feature_name=HIDDEN_STATE)
+        return Linear(self.hidden_dim, 1)(head_params, pooled)[:, 0]
+
+    def loss(self, logits, labels, weights):
+        nll = (jax.nn.softplus(logits) - logits * labels) * weights
+        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    step: int
+    train_loss: float
+    metrics: dict
+
+
+def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
+                                                          np.ndarray]]],
+        model_fn: Callable[[], tuple[Module, Module]],
+        task: Task,
+        epochs: int = 1,
+        learning_rate: float = 1e-3,
+        total_steps: int = 1000,
+        eval_batches: Optional[Callable[[], Iterator]] = None,
+        ckpt_dir: str = "",
+        log_every: int = 20,
+        seed: int = 0) -> RunResult:
+    """The paper's runner.run(): wires data, model, task, trainer.
+
+    model_fn() -> (init_states_module, gnn_module); both take/return
+    GraphTensors (MapFeatures-style + GraphUpdate stack).
+    train_batches(epoch) yields (padded GraphTensor, labels[C]).
+    """
+    init_states, gnn = model_fn()
+    head = task.head()
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "init": split_params(init_states.init(k1))[0],
+        "gnn": split_params(gnn.init(k2))[0],
+        "head": split_params(head.init(k3))[0],
+    }
+    opt = AdamW(learning_rate=warmup_cosine(learning_rate, 50, total_steps),
+                weight_decay=1e-5)
+    opt_state = opt.init(params)
+
+    def forward(params, graph):
+        graph = init_states(params["init"], graph)
+        graph = gnn(params["gnn"], graph)
+        return task.predict(params["head"], graph)
+
+    def loss_fn(params, graph, labels):
+        logits = forward(params, graph)
+        weights = graph.context.sizes.astype(jnp.float32)
+        return task.loss(logits, labels, weights)
+
+    @jax.jit
+    def train_step(params, opt_state, graph, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, graph, labels)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    @jax.jit
+    def eval_step(params, graph, labels):
+        logits = forward(params, graph)
+        weights = graph.context.sizes.astype(jnp.float32)
+        pred = jnp.argmax(logits, -1)
+        correct = ((pred == labels) * weights).sum()
+        return correct, weights.sum()
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    step = 0
+    last_loss = float("nan")
+    t0 = time.time()
+    for epoch in range(epochs):
+        for graph, labels in train_batches(epoch):
+            graph = jax.tree_util.tree_map(jnp.asarray, graph)
+            labels = jnp.asarray(labels)
+            params, opt_state, loss = train_step(params, opt_state, graph,
+                                                 labels)
+            step += 1
+            last_loss = float(loss)
+            if step % log_every == 0:
+                print(f"epoch {epoch} step {step} loss {last_loss:.4f} "
+                      f"({log_every / (time.time() - t0):.1f} it/s)",
+                      flush=True)
+                t0 = time.time()
+            if mgr is not None and mgr.should_save(step):
+                mgr.save_async(step, (params, opt_state))
+
+    metrics = {}
+    if eval_batches is not None:
+        correct = total = 0.0
+        for graph, labels in eval_batches():
+            graph = jax.tree_util.tree_map(jnp.asarray, graph)
+            c, n = eval_step(params, graph, jnp.asarray(labels))
+            correct += float(c)
+            total += float(n)
+        metrics["eval_accuracy"] = correct / max(total, 1.0)
+    if mgr is not None:
+        mgr.save_async(step, (params, opt_state))
+        mgr.wait()
+    metrics["params"] = params
+    return RunResult(step, last_loss, metrics)
+
+
+class DeepGraphInfomax(Task):
+    """Self-supervised DGI objective (paper §5 Task list): discriminate
+    node states of the real graph vs a feature-shuffled corruption against
+    a per-component summary vector (Velickovic et al. 2019)."""
+
+    def __init__(self, node_set_name: str, hidden_dim: int):
+        self.node_set_name = node_set_name
+        self.hidden_dim = hidden_dim
+
+    def head(self) -> Module:
+        # bilinear discriminator weight
+        return Linear(self.hidden_dim, self.hidden_dim, use_bias=False)
+
+    def logits_for(self, head_params, graph: GraphTensor,
+                   states: jnp.ndarray) -> jnp.ndarray:
+        summary = ops.pool_nodes_to_context(
+            graph, self.node_set_name, "mean", feature_value=states)
+        summary = jnp.tanh(summary)
+        proj = Linear(self.hidden_dim, self.hidden_dim, use_bias=False)(
+            head_params, states)
+        per_node_summary = ops.broadcast_context_to_nodes(
+            graph, self.node_set_name, feature_value=summary)
+        return (proj * per_node_summary).sum(-1)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        ns = graph.node_sets[self.node_set_name]
+        return self.logits_for(head_params, graph, ns[HIDDEN_STATE])
+
+    def corrupt(self, graph: GraphTensor, rng) -> GraphTensor:
+        """Corruption: permute node features within the set."""
+        ns = graph.node_sets[self.node_set_name]
+        perm = jax.random.permutation(rng, ns.capacity)
+        feats = {k: jnp.take(v, perm, axis=0)
+                 for k, v in ns.features.items()}
+        return graph.replace_features(node_sets={self.node_set_name: feats})
+
+    def loss(self, logits, labels, weights):
+        # labels: 1 real / 0 corrupted per node; weights: node validity
+        nll = jax.nn.softplus(logits) - logits * labels
+        return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)

@@ -1,0 +1,127 @@
+"""Batched serving engine: continuous-batching prefill/decode scheduler.
+
+Static-shape serving loop for the assigned LMs:
+  * fixed decode batch of `n_slots` sequences (left-aligned KV cache),
+  * prefill admits new requests into free slots (prefill computes a
+    per-request cache which is spliced into the batch cache),
+  * one fused decode step advances every active slot per tick,
+  * greedy or temperature sampling.
+
+This is the serve-side analogue of the paper's SavedModel/TF-Serving story:
+the engine holds the compiled step functions; requests are data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import build_model
+from repro.nn.attention import KVCache
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host engine (the pjit'd multi-chip path shares the step fns)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 512, rng_seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self.cache = self.model.init_cache(n_slots, max_len)
+        self.slot_busy = np.zeros(n_slots, bool)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_len = np.zeros(n_slots, np.int32)
+
+        self._prefill = jax.jit(
+            lambda p, toks: self.model.prefill(p, toks, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, toks, cache: self.model.decode_step(p, toks, cache))
+
+    # -- request admission -----------------------------------------------------
+
+    def admit(self, req: Request) -> bool:
+        free = np.where(~self.slot_busy)[0]
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        out, cache1 = self._prefill(self.params,
+                                    jnp.asarray(req.prompt)[None])
+        # splice the single-sequence cache into the batch cache at `slot`
+        self.cache = jax.tree_util.tree_map(
+            lambda batch, one: (batch.at[:, slot:slot + 1].set(
+                one.astype(batch.dtype))
+                if batch.ndim >= 2 and batch.shape[1] == self.n_slots
+                else batch),
+            self.cache, cache1)
+        first = int(jnp.argmax(out.logits[0, -1]))
+        req.generated.append(first)
+        self.slot_busy[slot] = True
+        self.slot_req[slot] = req
+        self.slot_len[slot] = len(req.prompt) + 1
+        return True
+
+    # -- decode tick --------------------------------------------------------------
+
+    def step(self) -> int:
+        """One fused decode step across all busy slots; returns #active."""
+        if not self.slot_busy.any():
+            return 0
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is not None and req.generated:
+                toks[s, 0] = req.generated[-1]
+        # batch cache length: engine keeps slots aligned by padding prompts
+        # to a common length per admission wave (documented simplification)
+        length = int(self.slot_len.max())
+        cache = self.cache._replace(length=jnp.asarray(length, jnp.int32)) \
+            if hasattr(self.cache, "length") else self.cache
+        out, self.cache = self._decode(self.params, jnp.asarray(toks), cache)
+        logits = out.logits[:, -1]
+        self.rng, sub = jax.random.split(self.rng)
+        active = 0
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if req.temperature > 0:
+                tok = int(jax.random.categorical(
+                    jax.random.fold_in(sub, s),
+                    logits[s] / req.temperature))
+            else:
+                tok = int(jnp.argmax(logits[s]))
+            req.generated.append(tok)
+            self.slot_len[s] += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or self.slot_len[s] >= self.max_len - 1):
+                req.done = True
+                self.slot_busy[s] = False
+                self.slot_req[s] = None
+            else:
+                active += 1
+        return active
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or self.slot_busy.any():
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            done = [r for r in requests if r.done]
+        return done

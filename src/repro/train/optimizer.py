@@ -1,0 +1,261 @@
+"""Optimizers (AdamW, Adafactor, SGD-momentum) + schedules + clipping.
+
+No optax in this environment; implemented directly on param pytrees.
+Moments may be stored in a reduced dtype (bf16) for the >=100B archs — an
+explicit distributed-memory trick recorded in EXPERIMENTS.md.
+Optimizer state reuses the params' logical sharding axes, so FSDP (ZeRO-3)
+sharding of m/v falls out of the same rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+
+def _sqsum(x) -> jnp.ndarray:
+    """Sum of squares in fp32 without materialising an fp32 copy of huge
+    leaves: chunk the reduction over the leading dim (the CPU pipeline does
+    not fuse convert+square into the reduce for multi-GiB tensors)."""
+    if x.size > 16 * 1024 * 1024 and x.ndim >= 2:
+        return jax.lax.map(
+            lambda s: jnp.sum(jnp.square(s.astype(jnp.float32))), x).sum()
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(_sqsum(x) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    # multiply in each leaf's own dtype: `g * f32_scalar` would otherwise
+    # materialise an fp32 copy of the whole gradient tree.
+    return jax.tree_util.tree_map(
+        lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+# Leaves larger than this (elements, pre-sharding) have their elementwise
+# update applied via lax.map over the leading (stacked-layer) dim: the fp32
+# working copies then cover one layer slice at a time instead of the whole
+# stacked tensor.  Crucial for the >=100B archs (arctic's stacked expert
+# weight is 156B params; an fp32 temp of its per-device shard is 2.4 GiB —
+# times several temps times three such leaves without chunking).
+CHUNKED_UPDATE_THRESHOLD = 64 * 1024 * 1024
+
+
+def _maybe_chunked(fn, *leaves):
+    """Apply an elementwise-per-slice update leaf-wise, chunking the leading
+    dim when the leaf is huge.  fn(*slices) -> tuple of slices."""
+    lead = leaves[0]
+    if lead.size <= CHUNKED_UPDATE_THRESHOLD or lead.ndim < 3:
+        return fn(*leaves)
+    return jax.lax.map(lambda xs: fn(*xs), leaves)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: PyTree
+    v: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    max_grad_norm: float = 1.0
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(zeros, params),
+                          jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> tuple[PyTree, AdamWState, dict]:
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), m32.astype(self.moment_dtype),
+                    v32.astype(self.moment_dtype))
+
+        out = jax.tree_util.tree_map(
+            lambda *ls: _maybe_chunked(upd, *ls),
+            params, grads, state.m, state.v)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return (new_params, AdamWState(step, new_m, new_v),
+                {"grad_norm": gnorm, "learning_rate": lr})
+
+    def state_axes(self, param_axes: PyTree) -> "AdamWState":
+        """Optimizer-state logical axes mirror the params'."""
+        return AdamWState((), param_axes, param_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; for the >=100B archs)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: PyTree  # row second-moment (or full v for <2D leaves)
+    vc: PyTree  # col second-moment (or unused zeros)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: Callable | float = 1e-3
+    decay: float = 0.8  # beta2 exponent: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    # T5X-style: no global grad-norm clip — Adafactor's rms_u update clip
+    # substitutes, and skipping it avoids full-gradient-tree fp32 temps.
+    max_grad_norm: float | None = None
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params: PyTree) -> AdafactorState:
+        def vr(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree_util.tree_map(vr, params),
+                              jax.tree_util.tree_map(vc, params))
+
+    def update(self, grads, state, params):
+        if self.max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+        lr = self._lr(step)
+
+        def upd(p, g, vr, vc):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if self._factored(p):
+                vr_n = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                vc_n = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr_n / jnp.maximum(
+                    vr_n.mean(axis=-1, keepdims=True), self.eps))[..., None] \
+                    * vc_n[..., None, :]
+                u = g32 * jax.lax.rsqrt(denom + self.eps)
+            else:
+                vr_n = beta2 * vr + (1 - beta2) * g2
+                vc_n = vc
+                u = g32 * jax.lax.rsqrt(vr_n + self.eps)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr *
+                     (u + self.weight_decay * p.astype(jnp.float32)))
+            return new_p.astype(p.dtype), vr_n, vc_n
+
+        # chunked update keeps fp32 working copies to one layer slice;
+        # NB the rms_u clip then applies per leading-dim slice (documented).
+        out = jax.tree_util.tree_map(
+            lambda *ls: _maybe_chunked(upd, *ls),
+            params, grads, state.vr, state.vc)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return (pick(0), AdafactorState(step, pick(1), pick(2)),
+                {"grad_norm": gnorm, "learning_rate": lr})
+
+    def state_axes(self, param_axes: PyTree) -> "AdafactorState":
+        def vr_ax(ax):
+            return tuple(ax[:-1]) if len(ax) >= 2 else tuple(ax)
+
+        def vc_ax(ax):
+            return tuple(ax[:-2]) + tuple(ax[-1:]) if len(ax) >= 2 else ()
+
+        t = lambda f: jax.tree_util.tree_map(
+            f, param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState((), t(vr_ax), t(vc_ax))
+
+
+def make_optimizer(kind: str, lr, *, total_steps: int = 10000,
+                   warmup: int = 200, moment_dtype=jnp.float32,
+                   weight_decay: float = 0.1):
+    sched = warmup_cosine(lr, warmup, total_steps)
+    if kind == "adamw":
+        return AdamW(learning_rate=sched, moment_dtype=moment_dtype,
+                     weight_decay=weight_decay)
+    if kind == "adafactor":
+        return Adafactor(learning_rate=sched, weight_decay=weight_decay)
+    raise ValueError(kind)

@@ -1,0 +1,218 @@
+"""GNN model-zoo tests: formula checks + end-to-end heterogeneous MPNN."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HIDDEN_STATE, ops
+from repro.core.convolutions import GATv2Conv, GCNConv, SAGEConv
+from repro.core.graph_tensor import SOURCE, TARGET
+from repro.core.models import hgt_like, rgcn, vanilla_mpnn
+from repro.core.schema import mag_schema
+from repro.nn.module import split_params
+
+from conftest import make_graph
+
+
+def with_states(graph, dim=8):
+    ns = {name: {HIDDEN_STATE: graph.node_sets[name]["h"][:, :dim]}
+          for name in ("users", "items")}
+    return graph.replace_features(node_sets=ns)
+
+
+def test_gcn_matches_formula(graph):
+    """GCNConv == 1/sqrt(du dv) normalized sum (paper Eq. 4)."""
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    conv = GCNConv(8, 8, receiver_tag=TARGET)
+    params, _ = split_params(conv.init(jax.random.PRNGKey(0)))
+    out = conv(params, g, "purchased")
+    # manual
+    es = g.edge_sets["purchased"]
+    h = g.node_sets["items"][HIDDEN_STATE]
+    w = params["w"]["w"]
+    wh = h @ w
+    deg_t = np.asarray(ops.node_degree(g, "purchased", TARGET))
+    deg_s = np.asarray(ops.node_degree(g, "purchased", SOURCE))
+    exp = np.zeros((g.node_sets["users"].capacity, 8), np.float32)
+    for i in range(int(np.asarray(es.sizes).sum())):
+        u, v = int(es.adjacency.source[i]), int(es.adjacency.target[i])
+        exp[v] += np.asarray(wh)[u] / np.sqrt(max(deg_s[u], 1)
+                                              * max(deg_t[v], 1))
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-4, atol=1e-4)
+
+
+def test_sage_mean_agg(graph):
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    conv = SAGEConv(8, 8, aggregator="mean", receiver_tag=TARGET)
+    params, _ = split_params(conv.init(jax.random.PRNGKey(0)))
+    out = conv(params, g, "purchased")
+    mean = ops.pool_edges_to_node(
+        g, "purchased", TARGET, "mean",
+        feature_value=ops.broadcast_node_to_edges(
+            g, "purchased", SOURCE, feature_name=HIDDEN_STATE))
+    exp = mean @ params["w"]["w"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5)
+
+
+def test_gatv2_attention_normalised(graph):
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    conv = GATv2Conv(2, 4, 8, receiver_tag=TARGET)
+    params, _ = split_params(conv.init(jax.random.PRNGKey(0)))
+    out = conv(params, g, "purchased")
+    assert out.shape == (g.node_sets["users"].capacity, 8)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_all_conv_receiver_tags(graph):
+    """Unified Conv base handles SOURCE/TARGET receivers (paper A.4)."""
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    for tag in (SOURCE, TARGET):
+        conv = GATv2Conv(2, 4, 8, receiver_tag=tag)
+        params, _ = split_params(conv.init(jax.random.PRNGKey(1)))
+        out = conv(params, g, "purchased")
+        expect_n = (g.node_sets["items"].capacity if tag == SOURCE
+                    else g.node_sets["users"].capacity)
+        assert out.shape[0] == expect_n
+
+
+def test_mpnn_learns_on_synthetic_mag():
+    """End-to-end: the §8 MPNN reaches better-than-chance accuracy on the
+    planted synthetic-MAG signal in a few steps."""
+    from repro.data import (GraphBatcher, InMemorySampler,
+                            SamplingSpecBuilder, find_size_constraints)
+    from repro.data.synthetic import synthetic_mag
+    from repro.orchestration import (RootNodeMulticlassClassification, run)
+    from repro.core.graph_update import MapFeatures
+    from repro.nn.layers import Linear, Embedding
+    from repro.nn.module import Module
+
+    store, labels = synthetic_mag(n_papers=400, n_authors=200,
+                                  n_institutions=20, n_fields=40,
+                                  n_classes=4, feat_dim=16)
+    schema = mag_schema()
+    seed_op = SamplingSpecBuilder(schema).seed("paper")
+    cited = seed_op.sample(6, "cites")
+    spec = seed_op.build()
+    sampler = InMemorySampler(store, spec, seed=0)
+    roots = list(range(200))
+    graphs = sampler.sample(roots)
+    sizes = find_size_constraints(graphs, 8)
+    batcher = GraphBatcher(graphs, 8, sizes, seed=0)
+
+    dim = 32
+
+    class Init(Module):
+        def __init__(self):
+            self.paper = Linear(16, dim)
+
+        def init(self, key):
+            return {"paper": self.paper.init(key)}
+
+        def __call__(self, params, graph):
+            return graph.replace_features(node_sets={
+                "paper": {HIDDEN_STATE: jax.nn.relu(self.paper(
+                    params["paper"], graph.node_sets["paper"]["feat"]))}})
+
+    edges = {"cites": ("paper", "paper")}
+    gnn = vanilla_mpnn(edges, {"paper": dim}, message_dim=dim,
+                       hidden_dim=dim, num_rounds=2)
+    task = RootNodeMulticlassClassification("paper", 4, dim)
+
+    def batches(epoch):
+        rng = np.random.default_rng(epoch)
+        for graph in batcher.epoch(epoch):
+            # labels of each component root
+            roots_here = []
+            off = 0
+            sizes_arr = np.asarray(graph.node_sets["paper"].sizes)
+            lab = np.asarray(graph.node_sets["paper"]["labels"])
+            starts = np.concatenate([[0], np.cumsum(sizes_arr)[:-1]])
+            y = lab[np.minimum(starts, len(lab) - 1)]
+            yield graph, y.astype(np.int32)
+
+    result = run(train_batches=batches,
+                 model_fn=lambda: (Init(), gnn), task=task, epochs=6,
+                 learning_rate=3e-3, total_steps=200,
+                 eval_batches=lambda: batches(99), log_every=1000)
+    assert result.metrics["eval_accuracy"] > 0.5, result.metrics
+
+
+def test_rgcn_and_hgt_run(graph):
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    edges = {"purchased": ("items", "users"), "is-friend": ("users", "users")}
+    for factory in (rgcn, hgt_like):
+        model = factory(edges, {"users": 8, "items": 8}, num_rounds=1,
+                        **({"hidden_dim": 8} if factory is rgcn else
+                           {"num_heads": 2, "per_head": 4}))
+        params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+        out = model(params, g)
+        assert HIDDEN_STATE in out.node_sets["users"].features
+
+
+def test_edge_and_context_updates(graph):
+    """EdgeSetUpdate + ContextUpdate (full Graph Networks round)."""
+    from repro.core.graph_update import (ContextUpdate, EdgeSetUpdate,
+                                         GraphUpdate, NextStateFromConcat,
+                                         NodeSetUpdate)
+    from repro.core.convolutions import SimpleConv
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    upd = GraphUpdate(
+        edge_sets={"purchased": EdgeSetUpdate(8 + 8, 12)},
+        node_sets={"users": NodeSetUpdate(
+            {"purchased": SimpleConv(8, 12 + 8, receiver_tag="target",
+                                     sender_node_feature=None,
+                                     sender_edge_feature="hidden_state")},
+            NextStateFromConcat(8 + 8, 16))},
+        context=ContextUpdate(["users"], 16, 8))
+    params, _ = split_params(upd.init(jax.random.PRNGKey(0)))
+    out = upd(params, g)
+    assert out.edge_sets["purchased"][HIDDEN_STATE].shape[1] == 12
+    assert out.node_sets["users"][HIDDEN_STATE].shape[1] == 16
+    assert out.context[HIDDEN_STATE].shape == (1, 8)
+
+
+def test_kernel_backed_segment_softmax(graph):
+    from repro.core import ops
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    scores = jnp.asarray(np.random.default_rng(0).normal(
+        size=(g.edge_sets["purchased"].capacity, 2)).astype(np.float32))
+    base = ops.segment_softmax(g, "purchased", "target",
+                               feature_value=scores)
+    ops.use_kernels(True)
+    try:
+        fused = ops.segment_softmax(g, "purchased", "target",
+                                    feature_value=scores)
+    finally:
+        ops.use_kernels(False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(fused),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_deep_graph_infomax_task(graph):
+    """DGI loss separates real from corrupted after a few steps."""
+    from repro.orchestration.runner import DeepGraphInfomax
+    from repro.train.optimizer import AdamW
+    g = with_states(jax.tree_util.tree_map(jnp.asarray, graph))
+    task = DeepGraphInfomax("users", 8)
+    head = task.head()
+    params = split_params(head.init(jax.random.PRNGKey(0)))[0]
+    opt = AdamW(learning_rate=5e-2, weight_decay=0.0)
+    opt_state = opt.init(params)
+    rng = jax.random.PRNGKey(1)
+
+    def loss_fn(p, g, rng):
+        pos = task.predict(p, g)
+        neg = task.predict(p, task.corrupt(g, rng))
+        w = g.node_sets["users"].mask().astype(jnp.float32)
+        return (task.loss(pos, jnp.ones_like(pos), w)
+                + task.loss(neg, jnp.zeros_like(neg), w))
+
+    step = jax.jit(lambda p, o, g, r: (
+        lambda l, gr: opt.update(gr, o, p)[:2] + (l,))(
+        *jax.value_and_grad(loss_fn)(p, g, r)))
+    first = None
+    for i in range(30):
+        rng, sub = jax.random.split(rng)
+        params, opt_state, loss = step(params, opt_state, g, sub)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (first, float(loss))

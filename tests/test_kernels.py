@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.segment_pool.kernel import segment_pool
+from repro.kernels.segment_pool.ref import segment_pool_ref
+from repro.kernels.edge_mpnn.kernel import edge_mpnn
+from repro.kernels.edge_mpnn.ref import edge_mpnn_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("e,n,d", [(64, 16, 8), (257, 40, 32),
+                                   (1024, 128, 128), (33, 7, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("reduce", ["sum", "max"])
+def test_segment_pool_sweep(e, n, d, dtype, reduce):
+    key = jax.random.PRNGKey(e + n + d)
+    vals = jax.random.normal(key, (e, d), dtype)
+    segs = jax.random.randint(jax.random.PRNGKey(1), (e,), 0, n + 3)
+    out = segment_pool(vals, segs, n_segments=n, reduce=reduce,
+                       e_block=128, interpret=True)
+    # oracle in fp32 (the kernel accumulates fp32; a bf16 jnp segment_sum
+    # would be the LESS accurate side)
+    ref = segment_pool_ref(vals.astype(jnp.float32), segs, n_segments=n,
+                           reduce=reduce).astype(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("e,ns,nt,ds,dt,m", [
+    (100, 16, 24, 8, 8, 16), (500, 64, 32, 32, 16, 64),
+    (129, 40, 50, 16, 24, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("activation", ["relu", "gelu"])
+def test_edge_mpnn_sweep(e, ns, nt, ds, dt, m, dtype, activation):
+    k = jax.random.PRNGKey(e)
+    hs = jax.random.normal(k, (ns, ds), dtype)
+    ht = jax.random.normal(jax.random.PRNGKey(1), (nt, dt), dtype)
+    src = jax.random.randint(jax.random.PRNGKey(2), (e,), 0, ns)
+    tgt = jax.random.randint(jax.random.PRNGKey(3), (e,), 0, nt + 4)
+    w = (0.3 * jax.random.normal(jax.random.PRNGKey(4),
+                                 (ds + dt, m))).astype(dtype)
+    b = jnp.zeros((m,), dtype)
+    out = edge_mpnn(hs, ht, src, tgt, w, b, n_src=ns, n_tgt=nt,
+                    e_block=128, activation=activation, interpret=True)
+    ref = edge_mpnn_ref(hs, ht, src, tgt, w, b, n_src=ns, n_tgt=nt,
+                        activation=activation)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,h,kh,d", [(1, 128, 4, 4, 32),
+                                        (2, 256, 8, 2, 64),
+                                        (1, 64, 2, 1, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, kh, d, causal, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kh, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_kernel_backed_pool_matches_ops(graph):
+    """ops.pool_edges_to_node with kernels enabled == jnp path."""
+    from repro.core import ops
+    from repro.core.graph_tensor import SOURCE, TARGET
+    msg = ops.broadcast_node_to_edges(graph, "purchased", SOURCE,
+                                      feature_name="h")
+    base = ops.pool_edges_to_node(graph, "purchased", TARGET, "sum",
+                                  feature_value=msg)
+    ops.use_kernels(True)
+    try:
+        fused = ops.pool_edges_to_node(graph, "purchased", TARGET, "sum",
+                                       feature_value=msg)
+    finally:
+        ops.use_kernels(False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(fused),
+                               rtol=1e-5, atol=1e-5)
