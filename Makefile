@@ -1,0 +1,23 @@
+# Tier-1 verification and kernel suites.
+#
+#   make test          — the tier-1 command (collection must succeed even
+#                        without optional test deps like hypothesis)
+#   make test-kernels  — kernel + dispatch parity suites in interpret mode
+#   make ci            — what CI runs: both of the above
+#   make bench-dispatch— segment-pool dispatch benchmark (BENCH_*.json)
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-kernels ci bench-dispatch
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-kernels:
+	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_dispatch.py
+
+ci: test test-kernels
+
+bench-dispatch:
+	$(PYTHON) -m benchmarks.run --quick --only dispatch

@@ -9,6 +9,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sampling_*          — §6.1 Algorithm 1 sampler throughput
   batching_*          — §3.2 merge+pad throughput
   kernel_*            — Pallas kernels (interpret) vs jnp oracle
+  dispatch_*          — segment pooling routed through kernels/dispatch.py
+                        vs the jnp reference path (also written to
+                        results/BENCH_segment_pool_dispatch.json so PRs
+                        accumulate a perf trajectory)
   arch_*              — per-arch roofline-derived step times (from dry-run)
 """
 from __future__ import annotations
@@ -281,6 +285,67 @@ def bench_kernels(quick: bool):
     emit("kernel_flash_attention_pallas_interp", t_k, f"ref_us={t_r:.1f}")
 
 
+def bench_dispatch(quick: bool):
+    """Segment pooling through the unified dispatch layer vs the jnp
+    reference, same call site (`ops.pool_edges_to_node`).
+
+    NB: off-TPU the kernel path runs in interpret mode, so us/call here
+    measures semantics overhead, not TPU speed; the JSON entry records the
+    dispatch decision (e_block, interpret) alongside both timings so the
+    perf trajectory is comparable across PRs and backends."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ops
+    from repro.core.graph_tensor import SOURCE, TARGET
+    from repro.kernels import dispatch
+    from conftest_shim import make_random_graph
+
+    n, e, d = (1000, 8000, 64) if quick else (2000, 32000, 128)
+    g = make_random_graph(n, e, d)
+    gj = jax.tree_util.tree_map(jnp.asarray, g)
+
+    def make_pool():
+        @jax.jit
+        def pooled(g):
+            msg = ops.broadcast_node_to_edges(g, "edges", SOURCE,
+                                              feature_name="h")
+            return ops.pool_edges_to_node(g, "edges", TARGET, "sum",
+                                          feature_value=msg)
+        return pooled
+
+    was_enabled = ops.kernels_enabled()
+    try:
+        ops.use_kernels(False)
+        ref = make_pool()  # traced with kernels disabled -> jnp reference
+        ref_out = ref(gj).block_until_ready()
+        ops.use_kernels(True)
+        dec = dispatch.segment_reduce_decision((e, d), jnp.float32, n)
+        disp = make_pool()  # traced with kernels enabled -> Pallas path
+        disp_out = disp(gj).block_until_ready()
+    finally:
+        ops.use_kernels(was_enabled)
+    np.testing.assert_allclose(np.asarray(disp_out), np.asarray(ref_out),
+                               rtol=1e-4, atol=1e-4)
+    iters = 3 if quick else 5
+    t_ref = timeit(lambda: ref(gj).block_until_ready(), iters=iters)
+    t_disp = timeit(lambda: disp(gj).block_until_ready(), iters=iters)
+    shape = f"n={n};e={e};d={d}"
+    emit("dispatch_segment_pool_reference", t_ref, shape)
+    emit("dispatch_segment_pool_kernel", t_disp,
+         f"{shape};e_block={dec.e_block};interpret={dec.interpret}")
+    out_path = Path("results/BENCH_segment_pool_dispatch.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps({
+        "benchmark": "segment_pool_dispatch",
+        "shape": {"n_segments": n, "n_edges": e, "feature_dim": d},
+        "decision": {"use_kernel": dec.use_kernel, "reason": dec.reason,
+                     "e_block": dec.e_block, "interpret": dec.interpret},
+        "reference_us_per_call": t_ref,
+        "dispatched_us_per_call": t_disp,
+        "backend": jax.default_backend(),
+    }, indent=1))
+
+
 def bench_archs(quick: bool):
     """Roofline-derived per-step seconds per (arch × shape) from dry-run."""
     path = Path("results/dryrun.json")
@@ -310,6 +375,7 @@ def main(argv=None):
         "sampling": bench_sampling,
         "batching": bench_batching,
         "kernels": bench_kernels,
+        "dispatch": bench_dispatch,
         "archs": bench_archs,
     }
     for name, fn in sections.items():

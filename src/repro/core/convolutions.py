@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core import ops
 from repro.core.graph_tensor import (CONTEXT, GraphTensor, HIDDEN_STATE,
                                      SOURCE, TARGET)
+from repro.kernels import dispatch as kernel_dispatch
 from repro.nn.layers import Linear, ACTIVATIONS
 from repro.nn.module import Module, Param
 
@@ -125,7 +126,14 @@ class AnyToAnyConv(Module):
 
 class SimpleConv(AnyToAnyConv):
     """message = message_fn(concat(sender inputs[, receiver state])),
-    then reduce — the paper's Fig. 7 `MyConv` generalised."""
+    then reduce — the paper's Fig. 7 `MyConv` generalised.
+
+    When the conv has the fused shape (node-to-node, sum-pooled, no edge
+    feature, receiver state combined) it routes the whole
+    gather->message-MLP->scatter round through the Pallas `edge_mpnn`
+    kernel via `repro.kernels.dispatch`; otherwise (or when dispatch deems
+    the call ineligible) it runs the generic broadcast/pool path.
+    """
 
     def __init__(self, units: int, in_dim: int, *, reduce_type: str = "sum",
                  combine_receiver: bool = True, activation: str = "relu",
@@ -134,10 +142,71 @@ class SimpleConv(AnyToAnyConv):
         self.reduce_type = reduce_type
         self.combine_receiver = combine_receiver
         self.message_fn = Linear(in_dim, units, kernel_axes=(None, None))
+        self.activation_name = activation
         self.act = ACTIVATIONS[activation]
 
     def init(self, key):
         return {"message": self.message_fn.init(key)}
+
+    def fused_decision(self, params, graph: GraphTensor,
+                       edge_set_name: str) -> kernel_dispatch.Decision:
+        """Dispatch decision for running this conv as one fused kernel."""
+        if self.receiver_tag == CONTEXT:
+            return kernel_dispatch.Decision(False, "context receiver")
+        if self.sender_edge_feature is not None:
+            return kernel_dispatch.Decision(False, "edge feature input")
+        if self.sender_node_feature is None:
+            return kernel_dispatch.Decision(False, "no sender node input")
+        if not (self.combine_receiver and self.receiver_feature):
+            return kernel_dispatch.Decision(False, "no receiver state")
+        if self.reduce_type != "sum":
+            return kernel_dispatch.Decision(
+                False, f"{self.reduce_type} pooling not fused")
+        es = graph.edge_sets[edge_set_name]
+        sender_name, recv_name = self._fused_endpoints(es)
+        h_src = graph.node_sets[sender_name][self.sender_node_feature]
+        h_tgt = graph.node_sets[recv_name][self.receiver_feature]
+        if h_src.ndim != 2 or h_tgt.ndim != 2:
+            return kernel_dispatch.Decision(False, "non-2D node states")
+        if h_src.dtype != h_tgt.dtype:
+            # the generic path would promote via concat; keep it there
+            return kernel_dispatch.Decision(False, "mixed state dtypes")
+        w = params["message"]["w"]
+        if w.shape[0] != h_src.shape[1] + h_tgt.shape[1]:
+            return kernel_dispatch.Decision(False, "in_dim mismatch")
+        # same inputs dispatch.edge_mpnn re-checks in __call__: capacities
+        # as node counts, so the two decisions cannot diverge
+        return kernel_dispatch.edge_mpnn_decision(
+            graph.node_sets[sender_name].capacity,
+            graph.node_sets[recv_name].capacity,
+            h_src.shape[1], h_tgt.shape[1],
+            w.shape[1], h_src.dtype, self.activation_name,
+            n_edges=int(es.adjacency.source.shape[0]))
+
+    def _fused_endpoints(self, es):
+        if self.receiver_tag == TARGET:
+            return es.adjacency.source_name, es.adjacency.target_name
+        return es.adjacency.target_name, es.adjacency.source_name
+
+    def __call__(self, params, graph: GraphTensor, edge_set_name: str):
+        if not self.fused_decision(params, graph, edge_set_name).use_kernel:
+            return super().__call__(params, graph, edge_set_name)
+        es = graph.edge_sets[edge_set_name]
+        adj = es.adjacency
+        sender_idx, recv_idx = ((adj.source, adj.target)
+                                if self.receiver_tag == TARGET
+                                else (adj.target, adj.source))
+        sender_name, recv_name = self._fused_endpoints(es)
+        h_src = graph.node_sets[sender_name][self.sender_node_feature]
+        h_tgt = graph.node_sets[recv_name][self.receiver_feature]
+        n_tgt = graph.node_sets[recv_name].capacity
+        w = params["message"]["w"].astype(h_src.dtype)
+        b = params["message"]["b"].astype(h_src.dtype)
+        tgt = jnp.where(es.mask(), recv_idx, n_tgt)  # padding -> dropped
+        return kernel_dispatch.edge_mpnn(
+            h_src, h_tgt, sender_idx, tgt, w, b,
+            n_src=graph.node_sets[sender_name].capacity, n_tgt=n_tgt,
+            activation=self.activation_name)
 
     def convolve(self, params, *, sender_node_input, sender_edge_input,
                  receiver_input, broadcast_from_receiver, pool_to_receiver,

@@ -64,11 +64,25 @@ class SingleInputNextState(Module):
 
 
 class NodeSetUpdate(Module):
-    """{edge_set_name: Conv} + NextState for one node set (paper Eq. 1)."""
+    """{edge_set_name: Conv} + NextState for one node set (paper Eq. 1).
+
+    Convs that expose a fused kernel path (e.g. SimpleConv's `edge_mpnn`
+    route via repro.kernels.dispatch) use it transparently — each conv is
+    invoked with the full graph, so a whole message-passing round runs
+    fused when every conv in the round is dispatch-eligible; see
+    `describe_dispatch` for which path each conv takes and why.
+    """
 
     def __init__(self, convs: Mapping[str, Module], next_state: Module):
         self.convs = dict(sorted(convs.items()))
         self.next_state = next_state
+
+    def describe_dispatch(self, params, graph: GraphTensor) -> dict:
+        """{edge_set_name: dispatch Decision (or None for generic convs)}."""
+        return {name: (conv.fused_decision(params["convs"][name], graph,
+                                           name)
+                       if hasattr(conv, "fused_decision") else None)
+                for name, conv in self.convs.items()}
 
     def init(self, key):
         keys = jax.random.split(key, len(self.convs) + 1)
@@ -145,6 +159,11 @@ class GraphUpdate(Module):
     Applies (in order): edge-set updates, node-set updates, context update —
     the Graph Networks schedule generalised to named sets.  Each returns a
     new GraphTensor with replaced hidden states.
+
+    With kernels enabled (repro.core.ops.use_kernels / REPRO_KERNELS) the
+    hot path of a round — gather, per-edge message, scatter-pool — runs
+    through the Pallas kernels behind repro.kernels.dispatch;
+    `describe_dispatch` reports the per-conv routing decisions.
     """
 
     def __init__(self, *,
@@ -169,6 +188,14 @@ class GraphUpdate(Module):
         if self.context is not None:
             p["context"] = self.context.init(keys[i])
         return p
+
+    def describe_dispatch(self, params, graph: GraphTensor) -> dict:
+        """{node_set_name: {edge_set_name: dispatch Decision | None}} —
+        which kernel path each conv of this round would take on `graph`."""
+        return {name: upd.describe_dispatch(params["node_sets"][name],
+                                            graph)
+                for name, upd in self.node_sets.items()
+                if hasattr(upd, "describe_dispatch")}
 
     def __call__(self, params, graph: GraphTensor) -> GraphTensor:
         if self.edge_sets:

@@ -7,13 +7,16 @@ paper exactly (tested in tests/test_ops.py against a dense-adjacency
 oracle).
 
 Index-based exchange (gather/segment ops) is the paper's core design choice
-vs. adjacency matmuls; the Pallas kernels in repro.kernels provide the
-TPU-tuned fused path, enabled via `use_kernels(True)` or the REPRO_KERNELS
-env var (the jnp path remains the reference oracle).
+vs. adjacency matmuls.  Every segment-shaped reduction below routes through
+`repro.kernels.dispatch`, the single registry/eligibility layer that picks
+the Pallas TPU kernel or the jnp reference per call site; enable the kernel
+path via `use_kernels(True)` or the REPRO_KERNELS env var.  Padding is
+expressed uniformly by remapping padded rows' segment ids to `n_segments`
+(the dispatch contract: out-of-range ids are dropped, empty segments
+yield 0).
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
@@ -21,17 +24,17 @@ import jax.numpy as jnp
 
 from repro.core.graph_tensor import (CONTEXT, GraphTensor, HIDDEN_STATE,
                                      SOURCE, TARGET)
+from repro.kernels import dispatch as kernel_dispatch
 
-_KERNELS_ENABLED = os.environ.get("REPRO_KERNELS", "0") == "1"
+_REDUCE_TYPES = ("sum", "mean", "max", "min")
 
 
 def use_kernels(enabled: bool) -> None:
-    global _KERNELS_ENABLED
-    _KERNELS_ENABLED = enabled
+    kernel_dispatch.enable(enabled)
 
 
 def kernels_enabled() -> bool:
-    return _KERNELS_ENABLED
+    return kernel_dispatch.enabled()
 
 
 def _edge_endpoint(graph: GraphTensor, edge_set_name: str, tag: str):
@@ -64,53 +67,23 @@ def broadcast_node_to_edges(graph: GraphTensor, edge_set_name: str, tag: str,
     return jnp.take(value, idx, axis=0)
 
 
-_SEGMENT_REDUCERS = {
-    "sum": jax.ops.segment_sum,
-    "mean": None,  # sum / count
-    "max": jax.ops.segment_max,
-    "min": jax.ops.segment_min,
-    "prod": jax.ops.segment_prod,
-}
-
-_NEUTRAL = {"max": -jnp.inf, "min": jnp.inf}
-
-
 def pool_edges_to_node(graph: GraphTensor, edge_set_name: str, tag: str,
                        reduce_type: str = "sum", *,
                        feature_name: str | None = None, feature_value=None):
     """Aggregate per-edge values at each `tag` endpoint node (paper Eq. 3).
 
-    Padding edges are excluded; for max/min the neutral element is used and
-    nodes with no (valid) incident edges yield 0.
+    Padding edges are excluded; nodes with no (valid) incident edges
+    yield 0 for every reduce_type.
     """
+    if reduce_type not in _REDUCE_TYPES:
+        raise ValueError(f"unknown reduce_type {reduce_type!r}")
     es = graph.edge_sets[edge_set_name]
     idx, node_set_name = _edge_endpoint(graph, edge_set_name, tag)
     value = _resolve_feature(es, feature_name, feature_value)
     num_nodes = graph.node_sets[node_set_name].capacity
-    emask = es.mask()
-    emask_b = emask.reshape(emask.shape + (1,) * (value.ndim - 1))
-
-    if reduce_type in ("sum", "mean"):
-        data = jnp.where(emask_b, value, 0)
-        if _KERNELS_ENABLED and value.ndim == 2 \
-                and jnp.issubdtype(value.dtype, jnp.floating):
-            from repro.kernels.segment_pool import ops as seg_ops
-            pooled = seg_ops.segment_sum(data, idx, num_nodes)
-        else:
-            pooled = jax.ops.segment_sum(data, idx, num_segments=num_nodes)
-        if reduce_type == "mean":
-            cnt = jax.ops.segment_sum(emask.astype(value.dtype), idx,
-                                      num_segments=num_nodes)
-            shape = cnt.shape + (1,) * (value.ndim - 1)
-            pooled = pooled / jnp.maximum(cnt, 1).reshape(shape)
-        return pooled
-    if reduce_type in ("max", "min"):
-        neutral = _NEUTRAL[reduce_type]
-        data = jnp.where(emask_b, value, neutral)
-        fn = _SEGMENT_REDUCERS[reduce_type]
-        pooled = fn(data, idx, num_segments=num_nodes)
-        return jnp.where(jnp.isfinite(pooled), pooled, 0)
-    raise ValueError(f"unknown reduce_type {reduce_type!r}")
+    seg_ids = jnp.where(es.mask(), idx, num_nodes)  # padding -> dropped
+    return kernel_dispatch.segment_reduce(value, seg_ids, num_nodes,
+                                          reduce_type)
 
 
 def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
@@ -122,27 +95,15 @@ def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
     num_nodes = graph.node_sets[node_set_name].capacity
     emask = es.mask()
     emask_b = emask.reshape(emask.shape + (1,) * (feature_value.ndim - 1))
-    scores = jnp.where(emask_b, feature_value, -jnp.inf)
-    if _KERNELS_ENABLED and scores.ndim == 2 \
-            and jnp.issubdtype(scores.dtype, jnp.floating):
-        # fused path: segment max + exp-sum via the Pallas segment kernel
-        from repro.kernels.segment_pool import ops as seg_ops
-        kidx = jnp.where(emask, idx, num_nodes)
-        seg_max = seg_ops.segment_max(
-            jnp.where(emask_b, scores, 0), kidx, num_nodes)
-        seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0)
-        shifted = jnp.where(emask_b,
-                            scores - jnp.take(seg_max, idx, axis=0), -jnp.inf)
-        exp = jnp.where(emask_b, jnp.exp(shifted), 0)
-        seg_sum = seg_ops.segment_sum(exp, kidx, num_nodes)
-        denom = jnp.take(seg_sum, idx, axis=0)
-        return exp / jnp.maximum(denom, 1e-37)
-    seg_max = jax.ops.segment_max(scores, idx, num_segments=num_nodes)
-    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0)
-    shifted = jnp.where(emask_b, scores - jnp.take(seg_max, idx, axis=0),
+    seg_ids = jnp.where(emask, idx, num_nodes)
+    # max-shift for stability, then exp-sum — both dispatched reductions
+    seg_max = kernel_dispatch.segment_reduce(feature_value, seg_ids,
+                                             num_nodes, "max")
+    shifted = jnp.where(emask_b,
+                        feature_value - jnp.take(seg_max, idx, axis=0),
                         -jnp.inf)
     exp = jnp.where(emask_b, jnp.exp(shifted), 0)
-    seg_sum = jax.ops.segment_sum(exp, idx, num_segments=num_nodes)
+    seg_sum = kernel_dispatch.segment_reduce(exp, seg_ids, num_nodes, "sum")
     denom = jnp.take(seg_sum, idx, axis=0)
     return exp / jnp.maximum(denom, 1e-37)
 
@@ -172,6 +133,15 @@ def broadcast_context_to_edges(graph: GraphTensor, edge_set_name: str, *,
     return jnp.take(value, jnp.minimum(comp, value.shape[0] - 1), axis=0)
 
 
+def _pool_items_to_context(piece, num_components, reduce_type, value):
+    if reduce_type not in _REDUCE_TYPES:
+        raise ValueError(f"unknown reduce_type {reduce_type!r}")
+    comp = jnp.where(piece.mask(), piece.component_ids(),
+                     num_components)  # padding -> dropped
+    return kernel_dispatch.segment_reduce(value, comp, num_components,
+                                          reduce_type)
+
+
 def pool_nodes_to_context(graph: GraphTensor, node_set_name: str,
                           reduce_type: str = "sum", *,
                           feature_name: str | None = None,
@@ -179,27 +149,8 @@ def pool_nodes_to_context(graph: GraphTensor, node_set_name: str,
     """Aggregate node values per graph component."""
     ns = graph.node_sets[node_set_name]
     value = _resolve_feature(ns, feature_name, feature_value)
-    comp = ns.component_ids()
-    c = graph.num_components
-    mask = ns.mask()
-    mask_b = mask.reshape(mask.shape + (1,) * (value.ndim - 1))
-    comp = jnp.where(mask, comp, c)  # padding -> overflow bucket
-    if reduce_type in ("sum", "mean"):
-        pooled = jax.ops.segment_sum(jnp.where(mask_b, value, 0), comp,
-                                     num_segments=c + 1)[:c]
-        if reduce_type == "mean":
-            cnt = jax.ops.segment_sum(mask.astype(value.dtype), comp,
-                                      num_segments=c + 1)[:c]
-            shape = cnt.shape + (1,) * (value.ndim - 1)
-            pooled = pooled / jnp.maximum(cnt, 1).reshape(shape)
-        return pooled
-    if reduce_type in ("max", "min"):
-        neutral = _NEUTRAL[reduce_type]
-        fn = _SEGMENT_REDUCERS[reduce_type]
-        pooled = fn(jnp.where(mask_b, value, neutral), comp,
-                    num_segments=c + 1)[:c]
-        return jnp.where(jnp.isfinite(pooled), pooled, 0)
-    raise ValueError(reduce_type)
+    return _pool_items_to_context(ns, graph.num_components, reduce_type,
+                                  value)
 
 
 def pool_edges_to_context(graph: GraphTensor, edge_set_name: str,
@@ -208,25 +159,8 @@ def pool_edges_to_context(graph: GraphTensor, edge_set_name: str,
                           feature_value=None):
     es = graph.edge_sets[edge_set_name]
     value = _resolve_feature(es, feature_name, feature_value)
-    comp = es.component_ids()
-    c = graph.num_components
-    mask = es.mask()
-    mask_b = mask.reshape(mask.shape + (1,) * (value.ndim - 1))
-    comp = jnp.where(mask, comp, c)
-    if reduce_type in ("sum", "mean"):
-        pooled = jax.ops.segment_sum(jnp.where(mask_b, value, 0), comp,
-                                     num_segments=c + 1)[:c]
-        if reduce_type == "mean":
-            cnt = jax.ops.segment_sum(mask.astype(value.dtype), comp,
-                                      num_segments=c + 1)[:c]
-            shape = cnt.shape + (1,) * (value.ndim - 1)
-            pooled = pooled / jnp.maximum(cnt, 1).reshape(shape)
-        return pooled
-    neutral = _NEUTRAL[reduce_type]
-    fn = _SEGMENT_REDUCERS[reduce_type]
-    pooled = fn(jnp.where(mask_b, value, neutral), comp,
-                num_segments=c + 1)[:c]
-    return jnp.where(jnp.isfinite(pooled), pooled, 0)
+    return _pool_items_to_context(es, graph.num_components, reduce_type,
+                                  value)
 
 
 def node_degree(graph: GraphTensor, edge_set_name: str, tag: str):
@@ -234,5 +168,7 @@ def node_degree(graph: GraphTensor, edge_set_name: str, tag: str):
     es = graph.edge_sets[edge_set_name]
     idx, node_set_name = _edge_endpoint(graph, edge_set_name, tag)
     num_nodes = graph.node_sets[node_set_name].capacity
-    return jax.ops.segment_sum(es.mask().astype(jnp.int32), idx,
-                               num_segments=num_nodes)
+    seg_ids = jnp.where(es.mask(), idx, num_nodes)
+    # int32 count: exact for any degree (fp32 would stop at 2**24)
+    return kernel_dispatch.segment_count(seg_ids, num_nodes,
+                                         dtype=jnp.int32)

@@ -61,7 +61,19 @@ def save_checkpoint(directory: str, step: int, state: PyTree, *,
         }
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
-    os.replace(tmp_dir, ckpt_dir)  # atomic publish
+    # Atomic, idempotent publish: if this step was already checkpointed
+    # (e.g. a restarted run re-saving the step it restored from), keep the
+    # published copy and discard the tmp dir — os.replace cannot replace a
+    # non-empty directory, and the existing checkpoint is equally valid.
+    if os.path.isdir(ckpt_dir):
+        shutil.rmtree(tmp_dir)
+    else:
+        try:
+            os.replace(tmp_dir, ckpt_dir)
+        except OSError:
+            if not os.path.isdir(ckpt_dir):  # a real failure, not a race
+                raise
+            shutil.rmtree(tmp_dir, ignore_errors=True)
     with open(os.path.join(directory, "latest.tmp"), "w") as f:
         f.write(os.path.basename(ckpt_dir))
     os.replace(os.path.join(directory, "latest.tmp"),
@@ -123,6 +135,7 @@ class CheckpointManager:
         self.keep = keep
         self.save_interval_steps = save_interval_steps
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self._preempted = False
 
     def install_preemption_hook(self, get_state: Callable[[], tuple]):
@@ -144,8 +157,14 @@ class CheckpointManager:
         host_state = jax.tree_util.tree_map(np.asarray, state)
 
         def work():
-            save_checkpoint(self.directory, step, host_state, extra=extra)
-            self._gc()
+            # failures are re-raised from wait() on the training thread,
+            # not leaked as unraisable thread exceptions
+            try:
+                save_checkpoint(self.directory, step, host_state,
+                                extra=extra)
+                self._gc()
+            except BaseException as exc:  # noqa: BLE001
+                self._error = exc
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -154,6 +173,9 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            error, self._error = self._error, None
+            raise error
 
     def _gc(self):
         if not os.path.isdir(self.directory):

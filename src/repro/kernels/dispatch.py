@@ -1,0 +1,340 @@
+"""Unified dispatch for segment-shaped ops: one registry + eligibility layer.
+
+Every segment-shaped reduction in `repro.core.ops` (edge->node pooling,
+segment softmax, context pooling, node degree) and the fused edge
+convolution in `repro.core.convolutions` route through this module, which
+decides per call site whether the Pallas kernel or the jnp reference runs.
+This replaces the per-op inline `_KERNELS_ENABLED and ndim == 2` guards:
+eligibility lives in exactly one place and is explainable (every decision
+carries a reason string, surfaced by `GraphUpdate.describe_dispatch`).
+
+Decision inputs (static at trace time, so dispatch is jit-safe):
+
+  * enablement  — `enable(True)` / the REPRO_KERNELS env var;
+  * dtype       — floats run natively; non-float inputs fall back (the
+                  fp32 accumulator cannot guarantee exact integer sums);
+  * rank        — kernels are 2-D; 1-D and >=2-D features are flattened to
+                  [E, prod(feature_dims)] here and reshaped on exit;
+  * VMEM budget — the fp32 accumulator (n_segments * D * 4B) plus one edge
+                  block must fit `VMEM_BUDGET_BYTES`; `choose_e_block`
+                  picks the largest power-of-two edge block that fits
+                  instead of a hard-coded 256, and a block that cannot fit
+                  at all routes the call to the reference;
+  * backend     — off-TPU the kernel runs in interpret mode (semantics
+                  checks, benchmarks); the jnp reference stays the oracle.
+
+Contract shared by kernels and references: `seg_ids >= n_segments` mark
+padding rows, and empty segments yield 0 for every reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_mpnn import kernel as _mpnn_kernel
+from repro.kernels.edge_mpnn.ref import edge_mpnn_ref
+from repro.kernels.segment_pool import kernel as _seg_kernel
+from repro.kernels.segment_pool.ref import segment_pool_ref
+
+# ---------------------------------------------------------------------------
+# Enablement (single source of truth; repro.core.ops delegates here)
+# ---------------------------------------------------------------------------
+
+_ENABLED = os.environ.get("REPRO_KERNELS", "0") == "1"
+
+
+def enable(on: bool) -> None:
+    global _ENABLED
+    _ENABLED = bool(on)
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget model and block-size heuristic
+# ---------------------------------------------------------------------------
+
+# Half of a TPU core's ~16 MiB VMEM: leaves headroom for double-buffered
+# input blocks and compiler temporaries.
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+MIN_E_BLOCK = 8          # fp32 sublane granularity
+MAX_E_BLOCK = 1024       # beyond this the one-hot matmul dominates anyway
+MAX_SEGMENTS = 4096      # one-hot lane dimension cap
+MAX_FEATURE_DIM = 256    # flattened feature width cap
+
+_SUPPORTED_REDUCES = ("sum", "mean", "max", "min")
+_SUPPORTED_ACTIVATIONS = ("relu", "gelu", "identity")
+
+
+def _floor_pow2(x: int) -> int:
+    return 1 << (max(int(x), 1).bit_length() - 1)
+
+
+def _ceil_pow2(x: int) -> int:
+    return 1 << (max(int(x) - 1, 0).bit_length() if x > 1 else 0)
+
+
+def _fit_block(resident: int, per_edge: int, n_edges: int | None) -> int:
+    """Largest power-of-two edge block whose working set fits the budget."""
+    avail = VMEM_BUDGET_BYTES - resident
+    if avail < per_edge * MIN_E_BLOCK:
+        return 0
+    block = min(_floor_pow2(avail // per_edge), MAX_E_BLOCK)
+    if n_edges is not None:
+        block = min(block, max(_ceil_pow2(n_edges), MIN_E_BLOCK))
+    return block
+
+
+def choose_e_block(n_segments: int, d: int, itemsize: int = 4, *,
+                   reduce: str = "sum", n_edges: int | None = None) -> int:
+    """Edge block for segment_pool; 0 means "does not fit, use reference".
+
+    sum keeps [E_blk, N] one-hot + [E_blk, D] values per step; max/min also
+    materialise the [E_blk, N, D] masked broadcast, which dominates.
+    """
+    resident = n_segments * d * 4  # fp32 accumulator
+    per_edge = n_segments * itemsize + d * itemsize + 4
+    if reduce in ("max", "min"):
+        per_edge += n_segments * d * 4
+    return _fit_block(resident, per_edge, n_edges)
+
+
+def choose_mpnn_e_block(n_src: int, n_tgt: int, ds: int, dt: int, m: int,
+                        itemsize: int = 4, *,
+                        n_edges: int | None = None) -> int:
+    """Edge block for the fused edge convolution; 0 means "does not fit"."""
+    resident = (n_src * ds + n_tgt * dt + (ds + dt) * m) * itemsize \
+        + n_tgt * m * 4  # fp32 accumulator
+    per_edge = (n_src * itemsize            # src one-hot
+                + n_tgt * (itemsize + 4)    # tgt one-hot (+ fp32 copy)
+                + 2 * (ds + dt) * itemsize  # gathered states + concat
+                + m * 4                     # fp32 message row
+                + 8)                        # edge ids
+    return _fit_block(resident, per_edge, n_edges)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Outcome of an eligibility check: which path runs and why."""
+    use_kernel: bool
+    reason: str
+    e_block: int = 0
+    interpret: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    name: str
+    kernel: Callable          # Pallas path
+    reference: Callable       # jnp oracle, identical contract
+    decide: Callable          # (...) -> Decision
+
+
+_REGISTRY: dict[str, KernelEntry] = {}
+
+
+def register(entry: KernelEntry) -> None:
+    _REGISTRY[entry.name] = entry
+
+
+def registry() -> dict[str, KernelEntry]:
+    return dict(_REGISTRY)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: Pallas kernels have no JVP/transpose rules, so the kernel paths
+# carry a custom VJP whose backward pass is the jnp reference's — forward
+# runs fused, gradients are the reference's exactly (at the cost of one
+# reference forward recompute on the backward pass).
+# ---------------------------------------------------------------------------
+
+def _seg_kernel_with_ref_vjp(flat, seg_ids, *, n_segments, reduce, e_block,
+                             interpret):
+    @jax.custom_vjp
+    def run(v):
+        return _seg_kernel.segment_pool(v, seg_ids, n_segments=n_segments,
+                                        reduce=reduce, e_block=e_block,
+                                        interpret=interpret)
+
+    def fwd(v):
+        return run(v), v
+
+    def bwd(v, g):
+        _, vjp = jax.vjp(
+            lambda vv: segment_pool_ref(vv, seg_ids, n_segments=n_segments,
+                                        reduce=reduce), v)
+        return vjp(g)
+
+    run.defvjp(fwd, bwd)
+    return run(flat)
+
+
+def _mpnn_kernel_with_ref_vjp(h_src, h_tgt, src, tgt, w, b, *, n_src,
+                              n_tgt, e_block, activation, interpret):
+    @jax.custom_vjp
+    def run(hs, ht, ww, bb):
+        return _mpnn_kernel.edge_mpnn(hs, ht, src, tgt, ww, bb,
+                                      n_src=n_src, n_tgt=n_tgt,
+                                      e_block=e_block,
+                                      activation=activation,
+                                      interpret=interpret)
+
+    def fwd(hs, ht, ww, bb):
+        return run(hs, ht, ww, bb), (hs, ht, ww, bb)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda hs, ht, ww, bb: edge_mpnn_ref(
+                hs, ht, src, tgt, ww, bb, n_src=n_src, n_tgt=n_tgt,
+                activation=activation), *res)
+        return vjp(g)
+
+    run.defvjp(fwd, bwd)
+    return run(h_src, h_tgt, w, b)
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce: sum / mean / max / min over segments
+# ---------------------------------------------------------------------------
+
+def segment_reduce_decision(shape: tuple, dtype, n_segments: int,
+                            reduce: str = "sum") -> Decision:
+    """Eligibility for one segment reduction (shape = values.shape)."""
+    if reduce not in _SUPPORTED_REDUCES:
+        return Decision(False, f"unsupported reduce {reduce!r}")
+    if not _ENABLED:
+        return Decision(False, "kernels disabled")
+    if shape[0] == 0:
+        return Decision(False, "no rows (empty grid)")
+    base = "sum" if reduce == "mean" else reduce
+    d = 1
+    for dim in shape[1:]:
+        d *= int(dim)
+    dtype = jnp.dtype(dtype)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        # Integer sums cannot run via the fp32 accumulator: exactness
+        # depends on value magnitude, which is unknown at trace time
+        # (counting callers like node_degree sum fp32 ones instead).
+        return Decision(False, f"non-float dtype {dtype} routes to "
+                        "reference")
+    itemsize = dtype.itemsize
+    if n_segments > MAX_SEGMENTS:
+        return Decision(False, f"n_segments {n_segments} > {MAX_SEGMENTS}")
+    if d > MAX_FEATURE_DIM:
+        return Decision(False, f"feature width {d} > {MAX_FEATURE_DIM}")
+    e_block = choose_e_block(n_segments, d, itemsize, reduce=base,
+                             n_edges=int(shape[0]))
+    if e_block == 0:
+        return Decision(False, "working set exceeds VMEM budget")
+    return Decision(True, "kernel", e_block, interpret=not _on_tpu())
+
+
+def segment_reduce(values, seg_ids, n_segments: int, reduce: str = "sum"):
+    """Route one segment reduction to the Pallas kernel or jnp reference.
+
+    values: [E, ...]; seg_ids: [E] with >= n_segments marking padding rows.
+    Returns [n_segments, ...]; empty segments yield 0; mean divides by
+    max(count, 1) where count is the number of non-padding rows.
+    """
+    if reduce == "mean":
+        total = segment_reduce(values, seg_ids, n_segments, "sum")
+        cnt = segment_count(seg_ids, n_segments)
+        cnt = cnt.reshape(cnt.shape + (1,) * (values.ndim - 1))
+        out_dtype = (total.dtype
+                     if jnp.issubdtype(total.dtype, jnp.floating)
+                     else jnp.float32)
+        # divide in fp32: a bf16 count would saturate at 256
+        return (total.astype(jnp.float32)
+                / jnp.maximum(cnt, 1)).astype(out_dtype)
+    entry = _REGISTRY["segment_pool"]
+    dec = entry.decide(values.shape, values.dtype, n_segments, reduce)
+    if not dec.use_kernel:
+        return entry.reference(values, seg_ids, n_segments=n_segments,
+                               reduce=reduce)
+    flat = values.reshape(values.shape[0], -1)
+    out = _seg_kernel_with_ref_vjp(flat, seg_ids, n_segments=n_segments,
+                                   reduce=reduce, e_block=dec.e_block,
+                                   interpret=dec.interpret)
+    return out.reshape((n_segments,) + values.shape[1:])
+
+
+def segment_count(seg_ids, n_segments: int, dtype=jnp.float32):
+    """Rows per segment (padding ids >= n_segments excluded).
+
+    Counting is always an O(E) plain segment_sum: the one-hot kernel would
+    spend O(E * n_segments) MXU work to count rows, so this path is never
+    kernel-eligible by design (used by mean pooling and node_degree).
+    Pass an integer dtype for exact counts beyond 2**24.
+    """
+    valid = seg_ids < n_segments
+    return jax.ops.segment_sum(valid.astype(dtype),
+                               jnp.where(valid, seg_ids, n_segments),
+                               num_segments=n_segments + 1)[:n_segments]
+
+
+# ---------------------------------------------------------------------------
+# edge_mpnn: fused gather -> per-edge MLP message -> segment-sum
+# ---------------------------------------------------------------------------
+
+def edge_mpnn_decision(n_src: int, n_tgt: int, ds: int, dt: int, m: int,
+                       dtype, activation: str = "relu",
+                       n_edges: int | None = None) -> Decision:
+    if activation not in _SUPPORTED_ACTIVATIONS:
+        return Decision(False, f"unsupported activation {activation!r}")
+    if not _ENABLED:
+        return Decision(False, "kernels disabled")
+    dtype = jnp.dtype(dtype)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        return Decision(False, f"unsupported dtype {dtype}")
+    if n_edges == 0:
+        return Decision(False, "no edges (empty grid)")
+    if max(n_src, n_tgt) > MAX_SEGMENTS:
+        return Decision(False, f"node count > {MAX_SEGMENTS}")
+    if m > MAX_FEATURE_DIM:
+        return Decision(False, f"message width {m} > {MAX_FEATURE_DIM}")
+    e_block = choose_mpnn_e_block(n_src, n_tgt, ds, dt, m, dtype.itemsize,
+                                  n_edges=n_edges)
+    if e_block == 0:
+        return Decision(False, "working set exceeds VMEM budget")
+    return Decision(True, "kernel", e_block, interpret=not _on_tpu())
+
+
+def edge_mpnn(h_src, h_tgt, src, tgt, w, b, *, n_src: int, n_tgt: int,
+              activation: str = "relu"):
+    """Fused edge convolution (or its jnp reference when ineligible).
+
+    h_src: [n_src, Ds]; h_tgt: [n_tgt, Dt]; src/tgt: [E] with padding edges
+    carrying tgt >= n_tgt; w: [Ds+Dt, M]; b: [M].  Returns [n_tgt, M].
+    """
+    entry = _REGISTRY["edge_mpnn"]
+    dec = entry.decide(n_src, n_tgt, h_src.shape[1], h_tgt.shape[1],
+                       w.shape[1], h_src.dtype, activation,
+                       n_edges=int(src.shape[0]))
+    if not dec.use_kernel:
+        return entry.reference(h_src, h_tgt, src, tgt, w, b, n_src=n_src,
+                               n_tgt=n_tgt, activation=activation)
+    return _mpnn_kernel_with_ref_vjp(h_src, h_tgt, src, tgt, w, b,
+                                     n_src=n_src, n_tgt=n_tgt,
+                                     e_block=dec.e_block,
+                                     activation=activation,
+                                     interpret=dec.interpret)
+
+
+register(KernelEntry("segment_pool", _seg_kernel.segment_pool,
+                     segment_pool_ref, segment_reduce_decision))
+register(KernelEntry("edge_mpnn", _mpnn_kernel.edge_mpnn, edge_mpnn_ref,
+                     edge_mpnn_decision))

@@ -11,6 +11,10 @@ a one-hot MXU matmul (gather = onehot(src) @ H), the message transform is a
 dense MXU matmul over the edge block, and the scatter-add is the transposed
 one-hot matmul accumulated across sequential grid steps.  One HBM read of
 the edge list; node/message traffic stays on-chip.
+
+The message transform and the scatter-add both run with fp32 accumulation
+(bf16 inputs would otherwise lose low bits on every per-edge add); the
+fp32 accumulator is cast back to the input dtype on exit.
 """
 from __future__ import annotations
 
@@ -19,6 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+_ACTIVATIONS = ("relu", "gelu", "identity")
 
 
 def _edge_mpnn_kernel(h_src_ref, h_tgt_ref, src_ref, tgt_ref, w_ref, b_ref,
@@ -42,35 +48,51 @@ def _edge_mpnn_kernel(h_src_ref, h_tgt_ref, src_ref, tgt_ref, w_ref, b_ref,
     ht = jax.lax.dot_general(oh_tgt, h_tgt_ref[...],
                              (((1,), (0,)), ((), ())))  # [E_blk, Dt]
     x = jnp.concatenate([hs, ht], axis=-1)
-    msg = jax.lax.dot_general(x, w_ref[...], (((1,), (0,)), ((), ())))
-    msg = msg + b_ref[...]
+    # message transform in fp32: bf16 inputs round once here, not per-op
+    msg = jax.lax.dot_general(x, w_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    msg = msg + b_ref[...].astype(jnp.float32)
     if activation == "relu":
         msg = jnp.maximum(msg, 0)
     elif activation == "gelu":
         msg = jax.nn.gelu(msg)
-    # scatter-add via transposed one-hot (padding tgt rows are all-zero)
+    # scatter-add via transposed one-hot (padding tgt rows are all-zero),
+    # accumulated in the fp32 out buffer
     out_ref[...] += jax.lax.dot_general(
-        oh_tgt, msg, (((0,), (0,)), ((), ())),
-        preferred_element_type=out_ref.dtype)
+        oh_tgt.astype(jnp.float32), msg, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("n_src", "n_tgt", "e_block",
                                              "activation", "interpret"))
 def edge_mpnn(h_src: jnp.ndarray, h_tgt: jnp.ndarray, src: jnp.ndarray,
               tgt: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
-              n_src: int, n_tgt: int, e_block: int = 256,
+              n_src: int, n_tgt: int, e_block: int | None = None,
               activation: str = "relu", interpret: bool = False
               ) -> jnp.ndarray:
     """h_src: [n_src, Ds]; h_tgt: [n_tgt, Dt]; src/tgt: [E] int32 (padding
     edges must carry tgt >= n_tgt); w: [Ds+Dt, M]; b: [M].
-    Returns pooled messages [n_tgt, M]."""
+    Returns pooled messages [n_tgt, M].  e_block=None sizes the edge block
+    from the VMEM budget."""
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unsupported activation {activation!r}; "
+                         f"expected one of {_ACTIVATIONS}")
     e = src.shape[0]
+    m = w.shape[1]
+    if e_block is None:
+        from repro.kernels import dispatch as _dispatch
+        e_block = _dispatch.choose_mpnn_e_block(
+            n_src, n_tgt, h_src.shape[1], h_tgt.shape[1], m,
+            h_src.dtype.itemsize, n_edges=e)
+        if e_block == 0:
+            raise ValueError(
+                "edge_mpnn: working set exceeds the VMEM budget; use "
+                "repro.kernels.dispatch for the fallback")
     pad = (-e) % e_block
     if pad:
         src = jnp.pad(src, (0, pad))
         tgt = jnp.pad(tgt, (0, pad), constant_values=n_tgt)
     e_tot = src.shape[0]
-    m = w.shape[1]
     out = pl.pallas_call(
         functools.partial(_edge_mpnn_kernel, e_block=e_block, n_src=n_src,
                           n_tgt=n_tgt, activation=activation),
@@ -84,8 +106,8 @@ def edge_mpnn(h_src: jnp.ndarray, h_tgt: jnp.ndarray, src: jnp.ndarray,
             pl.BlockSpec((1, m), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((n_tgt, m), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tgt, m), h_src.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_tgt, m), jnp.float32),
         interpret=interpret,
     )(h_src, h_tgt, src.astype(jnp.int32).reshape(-1, 1),
       tgt.astype(jnp.int32).reshape(-1, 1), w, b.reshape(1, -1))
-    return out
+    return out.astype(h_src.dtype)

@@ -17,6 +17,8 @@ def edge_mpnn_ref(h_src, h_tgt, src, tgt, w, b, *, n_src: int, n_tgt: int,
         msg = jnp.maximum(msg, 0)
     elif activation == "gelu":
         msg = jax.nn.gelu(msg)
+    elif activation != "identity":
+        raise ValueError(f"unsupported activation {activation!r}")
     msg = jnp.where(valid[:, None], msg, 0)
     return jax.ops.segment_sum(msg, jnp.where(valid, tgt, n_tgt),
                                num_segments=n_tgt + 1)[:n_tgt]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: segment reduction (sum/max) over edge values.
+"""Pallas TPU kernel: segment reduction (sum/max/min) over edge values.
 
 The GNN pooling primitive (paper §4.1 pool_edges_to_node), rethought for
 TPU: GPU implementations scatter with atomics (warp-per-row CSR); the TPU
@@ -7,12 +7,17 @@ the [N, D] output accumulator resident in VMEM across edge-block grid steps
 and turn the scatter itself into an MXU matmul:
 
     out += onehot(seg_ids_block) @ values_block       (sum)
-    out  = max(out, masked-broadcast max)             (max)
+    out  = max(out, masked-broadcast max)             (max; min = -max(-x))
 
 One HBM pass over edge values; the one-hot [E_blk, N] never leaves VMEM.
-Constraints: N * D * 4B + E_blk * N * 4B must fit VMEM (default tiles:
-E_blk=256, N <= 4096, D <= 256 — the ops.py wrapper falls back to the jnp
-reference for larger shapes).
+All reductions accumulate in fp32 regardless of input dtype (bf16 inputs
+would otherwise lose low bits on every scatter-add) and cast on exit.
+
+Constraints: the fp32 accumulator (N * D * 4B) plus one edge block
+(E_blk * N one-hot + E_blk * D values) must fit the VMEM budget.  Callers
+should route through repro.kernels.dispatch, which sizes E_blk from that
+budget (see dispatch.choose_e_block) and falls back to the jnp reference
+for out-of-envelope shapes; `e_block=None` here applies the same heuristic.
 """
 from __future__ import annotations
 
@@ -51,7 +56,7 @@ def _seg_max_kernel(values_ref, segs_ref, out_ref, *, n_segments: int,
     def _init():
         out_ref[...] = jnp.full_like(out_ref, NEG_INF)
 
-    vals = values_ref[...]
+    vals = values_ref[...].astype(jnp.float32)
     segs = segs_ref[...]
     mask = segs == jax.lax.broadcasted_iota(
         jnp.int32, (e_block, n_segments), 1)  # [E_blk, N]
@@ -63,11 +68,27 @@ def _seg_max_kernel(values_ref, segs_ref, out_ref, *, n_segments: int,
 @functools.partial(jax.jit, static_argnames=("n_segments", "e_block",
                                              "reduce", "interpret"))
 def segment_pool(values: jnp.ndarray, seg_ids: jnp.ndarray, *,
-                 n_segments: int, reduce: str = "sum", e_block: int = 256,
+                 n_segments: int, reduce: str = "sum",
+                 e_block: int | None = None,
                  interpret: bool = False) -> jnp.ndarray:
     """values: [E, D]; seg_ids: [E] int32 in [0, n_segments) or >= n_segments
-    for padding rows.  Returns [n_segments, D]."""
+    for padding rows.  Returns [n_segments, D]; empty segments yield 0
+    (sum identity) for every reduction.  e_block=None sizes the edge block
+    from the VMEM budget."""
+    if reduce == "min":
+        return -segment_pool(-values, seg_ids, n_segments=n_segments,
+                             reduce="max", e_block=e_block,
+                             interpret=interpret)
     e, d = values.shape
+    if e_block is None:
+        from repro.kernels import dispatch as _dispatch
+        e_block = _dispatch.choose_e_block(n_segments, d,
+                                           values.dtype.itemsize,
+                                           reduce=reduce, n_edges=e)
+        if e_block == 0:  # out of envelope; dispatch should have caught it
+            raise ValueError(
+                f"segment_pool: [{n_segments}, {d}] accumulator exceeds the "
+                "VMEM budget; use repro.kernels.dispatch for the fallback")
     pad = (-e) % e_block
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
@@ -76,7 +97,6 @@ def segment_pool(values: jnp.ndarray, seg_ids: jnp.ndarray, *,
     e_tot = values.shape[0]
     seg2d = seg_ids.astype(jnp.int32).reshape(-1, 1)
     kernel = _seg_sum_kernel if reduce == "sum" else _seg_max_kernel
-    acc_dtype = jnp.float32 if reduce == "sum" else values.dtype
     out = pl.pallas_call(
         functools.partial(kernel, n_segments=n_segments, e_block=e_block),
         grid=(e_tot // e_block,),
@@ -85,7 +105,7 @@ def segment_pool(values: jnp.ndarray, seg_ids: jnp.ndarray, *,
             pl.BlockSpec((e_block, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((n_segments, d), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_segments, d), acc_dtype),
+        out_shape=jax.ShapeDtypeStruct((n_segments, d), jnp.float32),
         interpret=interpret,
     )(values, seg2d)
     if reduce == "max":

@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for the segment_pool kernel."""
+"""Pure-jnp oracle for the segment_pool kernel.
+
+Same contract as the kernel: seg_ids >= n_segments mark padding rows, and
+empty segments yield 0 for every reduction.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,14 +13,16 @@ def segment_pool_ref(values: jnp.ndarray, seg_ids: jnp.ndarray, *,
                      n_segments: int, reduce: str = "sum") -> jnp.ndarray:
     seg_ids = seg_ids.astype(jnp.int32)
     valid = seg_ids < n_segments
+    valid_b = valid.reshape(valid.shape + (1,) * (values.ndim - 1))
+    safe_ids = jnp.where(valid, seg_ids, n_segments)
     if reduce == "sum":
         return jax.ops.segment_sum(
-            jnp.where(valid[:, None], values, 0),
-            jnp.where(valid, seg_ids, n_segments),
+            jnp.where(valid_b, values, 0), safe_ids,
             num_segments=n_segments + 1)[:n_segments]
-    if reduce == "max":
-        data = jnp.where(valid[:, None], values, -jnp.inf)
-        out = jax.ops.segment_max(data, jnp.where(valid, seg_ids, n_segments),
-                                  num_segments=n_segments + 1)[:n_segments]
+    if reduce in ("max", "min"):
+        neutral = -jnp.inf if reduce == "max" else jnp.inf
+        fn = jax.ops.segment_max if reduce == "max" else jax.ops.segment_min
+        data = jnp.where(valid_b, values, neutral)
+        out = fn(data, safe_ids, num_segments=n_segments + 1)[:n_segments]
         return jnp.where(jnp.isfinite(out), out, 0)
     raise ValueError(reduce)
