@@ -1,15 +1,21 @@
-# Tier-1 verification and kernel suites.
+# Tier-1 verification, kernel suites, example smoke, and the perf gate.
 #
 #   make test          — the tier-1 command (collection must succeed even
 #                        without optional test deps like hypothesis)
 #   make test-kernels  — kernel + dispatch parity suites in interpret mode
-#   make ci            — what CI runs: both of the above
-#   make bench-dispatch— segment-pool dispatch benchmark (BENCH_*.json)
+#   make ci            — what the CI test matrix runs: both of the above
+#   make smoke         — end-to-end example drivers (quickstart + the
+#                        OGBN-MAG trainer sharded over 8 forced CPU devices)
+#   make bench         — the benchmark sections that write BENCH_*.json
+#   make check-bench   — snapshot committed baselines, re-run bench, fail
+#                        on >25% us_per_call regression or gate violation
+#   make bench-dispatch— segment-pool dispatch benchmark only
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+BENCH_BASELINE := $(or $(TMPDIR),/tmp)/repro_bench_baseline
 
-.PHONY: test test-kernels ci bench-dispatch
+.PHONY: test test-kernels ci smoke bench check-bench bench-dispatch
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -18,6 +24,28 @@ test-kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_dispatch.py
 
 ci: test test-kernels
+
+smoke:
+	$(PYTHON) examples/quickstart.py
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
+	    --papers 320
+	$(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 1 \
+	    --papers 320
+
+bench:
+	$(PYTHON) -m benchmarks.run --quick --only dispatch
+	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
+
+check-bench:
+	rm -rf $(BENCH_BASELINE)
+	mkdir -p $(BENCH_BASELINE)
+	cp results/BENCH_*.json $(BENCH_BASELINE)/
+	rm -f results/BENCH_*.json  # a bench that fails must not leave the
+	                            # committed baseline behind as "fresh"
+	$(MAKE) bench
+	$(PYTHON) scripts/check_bench.py --baseline $(BENCH_BASELINE) \
+	    --fresh results
 
 bench-dispatch:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch

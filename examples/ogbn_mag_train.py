@@ -8,7 +8,14 @@ Uses the synthetic-MAG generator (OGB download unavailable offline); the
 planted signal makes neighborhood aggregation necessary, so the experiment
 is qualitatively faithful to Table 1.
 
-    PYTHONPATH=src python examples/ogbn_mag_train.py [--steps 300]
+    PYTHONPATH=src python examples/ogbn_mag_train.py
+
+Data-parallel over N (possibly host-forced) devices — the batch becomes a
+super-batch of N padded component groups sharded over a ("data",) mesh;
+loss matches the 1-device run on the same seed:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+        python examples/ogbn_mag_train.py --steps 3 --num-devices 8
 """
 import argparse
 import tempfile
@@ -30,6 +37,11 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--papers", type=int, default=1200)
 ap.add_argument("--epochs", type=int, default=4)
 ap.add_argument("--hidden", type=int, default=64)
+ap.add_argument("--steps", type=int, default=None,
+                help="cap total train steps (smoke runs use --steps 3)")
+ap.add_argument("--num-devices", type=int, default=1,
+                help="data-parallel replicas; >1 needs that many devices "
+                     "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
 args = ap.parse_args()
 
 # 1. problem identification + schema (paper §8.1)
@@ -95,22 +107,28 @@ class InitStates(Module):
 gnn = vanilla_mpnn(edges, node_dims, message_dim=dim, hidden_dim=dim,
                    num_rounds=4, use_layer_norm=True)
 
-# 4. orchestration (paper §8.4)
+# 4. orchestration (paper §8.4) — the batch is a super-batch of
+# `num_devices` padded component groups; SizeConstraints are per group, so
+# the same seed trains to the same loss at any device count.
 bs = 16
-sizes = find_size_constraints(graphs, bs)
+ndev = args.num_devices
+if bs % ndev:
+    raise SystemExit(f"--num-devices {ndev} must divide batch size {bs}")
+sizes = find_size_constraints(graphs, bs // ndev)
 task = RootNodeMulticlassClassification("paper", 8, dim)
 
 
 def batches_for(gs):
-    batcher = GraphBatcher(gs, bs, sizes, seed=0)
+    batcher = GraphBatcher(gs, bs, sizes, seed=0, num_replicas=ndev)
+    root_labels = RootNodeMulticlassClassification.root_labels
 
     def gen(epoch):
         for graph in batcher.epoch(epoch % 5):
-            arr = np.asarray(graph.node_sets["paper"].sizes)
+            arr = np.asarray(graph.node_sets["paper"].sizes)   # [R, C]
             lab = np.asarray(graph.node_sets["paper"]["labels"])
-            starts = np.concatenate([[0], np.cumsum(arr)[:-1]])
-            yield graph, lab[np.minimum(starts, len(lab) - 1)].astype(
-                np.int32)
+            yield graph, np.stack([
+                root_labels(arr[r], lab[r]) for r in range(arr.shape[0])
+            ]).astype(np.int32)
 
     return gen
 
@@ -119,8 +137,11 @@ result = run(train_batches=batches_for(train_graphs),
              model_fn=lambda: (InitStates(), gnn), task=task,
              epochs=args.epochs, learning_rate=3e-3, total_steps=600,
              eval_batches=lambda: batches_for(test_graphs)(0),
-             ckpt_dir="", log_every=20)
+             ckpt_dir="", log_every=20, num_devices=ndev,
+             max_steps=args.steps)
 print(f"final loss {result.train_loss:.4f}  "
-      f"test accuracy {result.metrics['eval_accuracy']:.4f}")
-assert result.metrics["eval_accuracy"] > 0.5
+      f"test accuracy {result.metrics['eval_accuracy']:.4f}  "
+      f"({ndev} device(s), {result.step} steps)")
+if args.steps is None:  # full runs keep the accuracy gate; --steps N
+    assert result.metrics["eval_accuracy"] > 0.5  # smoke runs skip it
 print("ogbn_mag_train OK")

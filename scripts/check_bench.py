@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare freshly produced results/BENCH_*.json
+against the committed baselines.
+
+    python scripts/check_bench.py --baseline <dir> --fresh results
+
+Fails (exit 1) when any metric whose key path contains ``us_per_call``
+slowed down by more than --tolerance (default 25%) relative to the same
+metric in the baseline file of the same name, or when a file's own
+``gates`` section is violated.  New benchmark files (no baseline) and new
+metrics pass with a note — the gate protects existing numbers, it does not
+freeze the schema.
+
+``gates`` lets a benchmark carry self-describing acceptance bounds::
+
+    "gates": {"speedup_8dev_vs_1dev": {"min": 1.5}}
+
+keyed by dotted path into the same JSON document.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def collect_metrics(obj, path=(), in_metric=False):
+    """(dotted_path, value) for every numeric leaf under a key containing
+    'us_per_call'."""
+    out = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out += collect_metrics(v, path + (str(k),),
+                                   in_metric or "us_per_call" in str(k))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        if in_metric:
+            out.append((".".join(path), float(obj)))
+    return out
+
+
+def lookup(obj, dotted):
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def check_file(fresh_path: Path, base_path: Path | None, tolerance: float,
+               min_us: float):
+    failures, notes = [], []
+    fresh = json.loads(fresh_path.read_text())
+
+    for dotted, spec in (fresh.get("gates") or {}).items():
+        val = lookup(fresh, dotted)
+        if val is None:
+            failures.append(f"{fresh_path.name}: gate field {dotted!r} "
+                            "missing from document")
+            continue
+        if "min" in spec and val < spec["min"]:
+            failures.append(f"{fresh_path.name}: {dotted} = {val:.3f} "
+                            f"below gate min {spec['min']}")
+        if "max" in spec and val > spec["max"]:
+            failures.append(f"{fresh_path.name}: {dotted} = {val:.3f} "
+                            f"above gate max {spec['max']}")
+
+    if base_path is None or not base_path.exists():
+        notes.append(f"{fresh_path.name}: no committed baseline "
+                     "(new benchmark) — us_per_call comparison skipped")
+        return failures, notes
+
+    base = json.loads(base_path.read_text())
+    base_metrics = dict(collect_metrics(base))
+    fresh_metrics = dict(collect_metrics(fresh))
+    for key, base_val in sorted(base_metrics.items()):
+        if key not in fresh_metrics:
+            failures.append(f"{fresh_path.name}: metric {key} present in "
+                            "baseline but missing from fresh results")
+            continue
+        fresh_val = fresh_metrics[key]
+        if base_val < min_us:
+            notes.append(f"{fresh_path.name}: {key} baseline "
+                         f"{base_val:.1f}us below --min-us, skipped")
+            continue
+        ratio = fresh_val / base_val if base_val else float("inf")
+        line = (f"{fresh_path.name}: {key} {base_val:.1f} -> "
+                f"{fresh_val:.1f} us ({ratio - 1.0:+.0%})")
+        if ratio > 1.0 + tolerance:
+            failures.append(line + f" exceeds {tolerance:.0%} tolerance")
+        else:
+            notes.append(line)
+    for key in sorted(set(fresh_metrics) - set(base_metrics)):
+        notes.append(f"{fresh_path.name}: new metric {key} "
+                     f"({fresh_metrics[key]:.1f}us), no baseline")
+    return failures, notes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="results",
+                    help="dir with freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", required=True,
+                    help="dir with the committed baseline BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional slowdown (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore baseline metrics faster than this "
+                         "(timer noise floor)")
+    args = ap.parse_args(argv)
+
+    fresh_dir, base_dir = Path(args.fresh), Path(args.baseline)
+    fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
+    if not fresh_files:
+        print(f"check_bench: no BENCH_*.json under {fresh_dir}/",
+              file=sys.stderr)
+        return 1
+
+    all_failures = []
+    for f in fresh_files:
+        failures, notes = check_file(f, base_dir / f.name, args.tolerance,
+                                     args.min_us)
+        for n in notes:
+            print(f"  ok   {n}")
+        for x in failures:
+            print(f"  FAIL {x}")
+        all_failures += failures
+    for b in sorted(base_dir.glob("BENCH_*.json")):
+        if not (fresh_dir / b.name).exists():
+            all_failures.append(f"{b.name}: baseline exists but fresh run "
+                                "produced no such file")
+            print(f"  FAIL {all_failures[-1]}")
+
+    if all_failures:
+        print(f"check_bench: {len(all_failures)} failure(s)")
+        return 1
+    print(f"check_bench: {len(fresh_files)} file(s) within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

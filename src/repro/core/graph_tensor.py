@@ -13,10 +13,11 @@ names are static aux data, so GraphTensors pass through jit/grad/vmap/scan.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = Any
 
@@ -201,6 +202,54 @@ class GraphTensor:
         if context is None:
             context = Context(jnp.ones((1,), jnp.int32), {})
         return cls(context, node_sets, edge_sets)
+
+
+# ---------------------------------------------------------------------------
+# Super-batch stacking (data parallelism over padded component groups)
+# ---------------------------------------------------------------------------
+#
+# A *stacked* GraphTensor carries `R` structurally identical padded graphs
+# ("component groups") on a leading axis: every leaf gains a [R, ...] leading
+# dim while the static aux data (names, capacities) stays per-group.  It is a
+# transport container for sharding over a device mesh's "data" axis — graph
+# ops must not run on it directly; `unstack_graph` (or a shard_map body that
+# slices its local group) restores scalar GraphTensors first.
+
+def stack_graphs(graphs: "Sequence[GraphTensor]") -> GraphTensor:
+    """Stack structurally identical padded GraphTensors on a new leading
+    axis.  All inputs must share one treedef (same set names, capacities,
+    feature keys) — i.e. be padded to the same SizeConstraints."""
+    if not graphs:
+        raise ValueError("stack_graphs: empty sequence")
+    treedefs = {jax.tree_util.tree_structure(g) for g in graphs}
+    if len(treedefs) != 1:
+        raise ValueError(
+            "stack_graphs: inputs are not structurally identical "
+            f"(got {len(treedefs)} distinct treedefs; pad every group to "
+            "the same SizeConstraints first)")
+
+    def _stack(*leaves):
+        if all(isinstance(x, np.ndarray) for x in leaves):
+            return np.stack(leaves)
+        return jnp.stack([jnp.asarray(x) for x in leaves])
+
+    return jax.tree_util.tree_map(_stack, *graphs)
+
+
+def stack_size(graph: GraphTensor) -> Optional[int]:
+    """Number of stacked component groups, or None for a scalar
+    GraphTensor.  Discriminates on context.sizes rank ([C] vs [R, C])."""
+    ndim = getattr(graph.context.sizes, "ndim", 1)
+    return int(graph.context.sizes.shape[0]) if ndim == 2 else None
+
+
+def unstack_graph(graph: GraphTensor) -> "list[GraphTensor]":
+    """Invert :func:`stack_graphs`: split the leading group axis back into
+    scalar GraphTensors (index, don't copy — works on jit/shard_map
+    tracers)."""
+    n = graph.context.sizes.shape[0]
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], graph)
+            for i in range(n)]
 
 
 HIDDEN_STATE = "hidden_state"

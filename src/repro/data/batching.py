@@ -26,10 +26,32 @@ class SizeConstraints:
     total_num_edges: Mapping[str, int]
 
     def validate(self, graph: GraphTensor):
+        """Raise ValueError naming the offending set when `graph` cannot fit
+        these constraints (a bare assert would vanish under ``python -O``,
+        and the batcher is where a user-facing shape error must be
+        actionable)."""
         for name, ns in graph.node_sets.items():
-            assert ns.capacity <= self.total_num_nodes[name]
+            if name not in self.total_num_nodes:
+                raise ValueError(
+                    f"node set {name!r} has no capacity in "
+                    f"SizeConstraints.total_num_nodes "
+                    f"(known: {sorted(self.total_num_nodes)})")
+            if ns.capacity > self.total_num_nodes[name]:
+                raise ValueError(
+                    f"node set {name!r}: {ns.capacity} nodes exceed "
+                    f"total_num_nodes[{name!r}] = "
+                    f"{self.total_num_nodes[name]}")
         for name, es in graph.edge_sets.items():
-            assert es.capacity <= self.total_num_edges[name]
+            if name not in self.total_num_edges:
+                raise ValueError(
+                    f"edge set {name!r} has no capacity in "
+                    f"SizeConstraints.total_num_edges "
+                    f"(known: {sorted(self.total_num_edges)})")
+            if es.capacity > self.total_num_edges[name]:
+                raise ValueError(
+                    f"edge set {name!r}: {es.capacity} edges exceed "
+                    f"total_num_edges[{name!r}] = "
+                    f"{self.total_num_edges[name]}")
 
 
 def merge_graphs(graphs: Sequence[GraphTensor]) -> GraphTensor:
@@ -96,7 +118,12 @@ def pad_to_sizes(graph: GraphTensor, sizes: SizeConstraints) -> GraphTensor:
     range but are masked out of every pooled reduction."""
     c_real = graph.num_components
     c_total = sizes.total_num_components
-    assert c_real < c_total, "need >= 1 slot for the padding component"
+    if c_real >= c_total:
+        raise ValueError(
+            f"{c_real} components leave no slot for the padding component "
+            f"(total_num_components = {c_total}); raise "
+            "total_num_components to at least batch_size + 1")
+    sizes.validate(graph)
 
     ctx_sizes = np.concatenate([
         np.asarray(graph.context.sizes),
@@ -110,7 +137,10 @@ def pad_to_sizes(graph: GraphTensor, sizes: SizeConstraints) -> GraphTensor:
     for name, ns in graph.node_sets.items():
         cap = sizes.total_num_nodes[name]
         n_valid = int(np.asarray(ns.sizes).sum())
-        assert n_valid <= cap, (name, n_valid, cap)
+        if n_valid > cap:
+            raise ValueError(
+                f"node set {name!r}: {n_valid} valid nodes exceed "
+                f"total_num_nodes[{name!r}] = {cap}")
         pad_node_idx[name] = min(n_valid, cap - 1)
         new_sizes = np.concatenate([
             np.asarray(ns.sizes),
@@ -124,7 +154,10 @@ def pad_to_sizes(graph: GraphTensor, sizes: SizeConstraints) -> GraphTensor:
     for name, es in graph.edge_sets.items():
         cap = sizes.total_num_edges[name]
         e_valid = int(np.asarray(es.sizes).sum())
-        assert e_valid <= cap, (name, e_valid, cap)
+        if e_valid > cap:
+            raise ValueError(
+                f"edge set {name!r}: {e_valid} valid edges exceed "
+                f"total_num_edges[{name!r}] = {cap}")
         new_sizes = np.concatenate([
             np.asarray(es.sizes),
             np.zeros(c_total - c_real - 1, np.int32),

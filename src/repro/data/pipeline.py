@@ -15,22 +15,53 @@ from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
-from repro.core.graph_tensor import GraphTensor
+from repro.core.graph_tensor import GraphTensor, stack_graphs
 from repro.data.batching import SizeConstraints, merge_graphs, pad_to_sizes
 
 
 class GraphBatcher:
+    """Batches sampled graphs into padded fixed-shape GraphTensors.
+
+    Two output contracts:
+
+    * ``num_replicas=None`` (legacy): each step merges ``batch_size`` graphs
+      into ONE scalar GraphTensor padded to ``sizes``.
+    * ``num_replicas=R`` (super-batch, data parallelism): this rank's
+      ``batch_size // world`` graphs are split into ``R`` contiguous
+      *component groups* of ``batch_size // (world * R)`` graphs; each
+      group is merged and padded to ``sizes`` — which in this mode is the
+      PER-GROUP constraint, used as given (no ``world`` division), e.g.
+      ``find_size_constraints(graphs, batch_size // (world * R))`` — and
+      the groups are stacked on a leading ``[R, ...]`` axis, the unit that
+      ``repro.distributed.graph_sharding`` shards over the mesh's "data"
+      axis.  ``R=1`` emits ``[1, ...]`` stacks, so a 1-device run exercises
+      the identical code path.
+    """
+
     def __init__(self, graphs: Sequence[GraphTensor], batch_size: int,
                  sizes: SizeConstraints, *, seed: int = 0,
-                 rank: int = 0, world: int = 1, drop_remainder: bool = True):
+                 rank: int = 0, world: int = 1, drop_remainder: bool = True,
+                 num_replicas: Optional[int] = None):
         self.graphs = list(graphs)
         self.batch_size = batch_size
         self.sizes = sizes
         self.seed = seed
         self.rank = rank
         self.world = world
-        assert batch_size % world == 0
+        if batch_size % world:
+            raise ValueError(f"batch_size {batch_size} not divisible by "
+                             f"world {world}")
         self.per_rank = batch_size // world
+        self.num_replicas = num_replicas
+        if num_replicas is not None:
+            if num_replicas < 1:
+                raise ValueError(f"num_replicas must be >= 1, "
+                                 f"got {num_replicas}")
+            if self.per_rank % num_replicas:
+                raise ValueError(
+                    f"per-rank batch {self.per_rank} not divisible by "
+                    f"num_replicas {num_replicas}")
+        self.per_group = self.per_rank // (num_replicas or 1)
 
     def epoch(self, epoch: int, *, start_step: int = 0
               ) -> Iterator[GraphTensor]:
@@ -41,8 +72,16 @@ class GraphBatcher:
         for step in range(start_step, n_steps):
             lo = step * self.batch_size + self.rank * self.per_rank
             idx = order[lo:lo + self.per_rank]
-            merged = merge_graphs([self.graphs[i] for i in idx])
-            yield pad_to_sizes(merged, self._rank_sizes())
+            if self.num_replicas is None:
+                merged = merge_graphs([self.graphs[i] for i in idx])
+                yield pad_to_sizes(merged, self._rank_sizes())
+                continue
+            groups = []
+            for r in range(self.num_replicas):
+                gidx = idx[r * self.per_group:(r + 1) * self.per_group]
+                merged = merge_graphs([self.graphs[i] for i in gidx])
+                groups.append(pad_to_sizes(merged, self.sizes))
+            yield stack_graphs(groups)
 
     def _rank_sizes(self) -> SizeConstraints:
         if self.world == 1:

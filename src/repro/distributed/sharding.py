@@ -139,6 +139,26 @@ def shard_activation(x, names: Sequence[Any]):
         x, NamedSharding(ctx.mesh, spec))
 
 
+def data_axis_names(mesh: Mesh) -> tuple:
+    """The mesh axes that carry data parallelism, in rule-table order.
+
+    The act-rule for the logical "batch" axis is ("pod", "data"); this
+    filters it to the axes actually present on `mesh` — the axes a
+    GraphTensor super-batch (repro.distributed.graph_sharding) or a token
+    batch's leading dim shards over."""
+    target = DEFAULT_ACT_RULES["batch"]
+    cand = tuple(target) if isinstance(target, (tuple, list)) else (target,)
+    return tuple(a for a in cand if a in mesh.axis_names)
+
+
+def data_parallel_size(mesh: Mesh) -> int:
+    """Total number of data-parallel shards on `mesh`."""
+    size = 1
+    for a in data_axis_names(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
 def is_axes_leaf(x) -> bool:
     """A logical-axes leaf is a PLAIN tuple of axis names (str|None).
     NamedTuples (pytree containers like KVCache/AdamWState) are NOT leaves."""

@@ -28,6 +28,7 @@ padding rows, and empty segments yield 0 for every reduction.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Callable
@@ -54,6 +55,48 @@ def enable(on: bool) -> None:
 
 def enabled() -> bool:
     return _ENABLED
+
+
+# ---------------------------------------------------------------------------
+# Data parallelism: eligibility must budget VMEM from PER-SHARD shapes.
+#
+# Two ways per-shard shapes reach the decision functions:
+#
+#   * shard_map / vmap step (repro.distributed.graph_sharding): the loss is
+#     traced with per-shard GraphTensors, so `values.shape` is already the
+#     per-shard shape and nothing else is needed — this is the default path;
+#   * GSPMD auto-sharding over GLOBAL shapes (e.g. a pjit'd step whose batch
+#     leaves keep the full super-batch dims at trace time): the step factory
+#     must wrap tracing in `with dispatch.data_parallel(n_shards):` so row
+#     and segment counts are divided down to what one device actually sees.
+#     Budgeting from global shapes would wrongly reject shard-sized work
+#     ("exceeds VMEM") or pick edge blocks tuned for arrays 8x too large.
+# ---------------------------------------------------------------------------
+
+_DATA_SHARDS = 1
+
+
+@contextlib.contextmanager
+def data_parallel(num_shards: int):
+    """Trace-time context: decisions divide row/segment counts by
+    `num_shards`.  Only for steps traced with global batch shapes; the
+    shard_map path sees per-shard shapes already and must not use this."""
+    global _DATA_SHARDS
+    prev = _DATA_SHARDS
+    _DATA_SHARDS = max(int(num_shards), 1)
+    try:
+        yield
+    finally:
+        _DATA_SHARDS = prev
+
+
+def data_shards() -> int:
+    return _DATA_SHARDS
+
+
+def _per_shard(n: int) -> int:
+    """Per-shard count for a leading dim that GSPMD splits over data."""
+    return -(-int(n) // _DATA_SHARDS)  # ceil: the largest shard decides
 
 
 # ---------------------------------------------------------------------------
@@ -232,15 +275,24 @@ def segment_reduce_decision(shape: tuple, dtype, n_segments: int,
         return Decision(False, f"non-float dtype {dtype} routes to "
                         "reference")
     itemsize = dtype.itemsize
-    if n_segments > MAX_SEGMENTS:
-        return Decision(False, f"n_segments {n_segments} > {MAX_SEGMENTS}")
+    # Per-device counts: under data_parallel(n) the trace-time shapes are
+    # global and one shard owns ~1/n of the rows and segments.
+    n_rows = _per_shard(shape[0])
+    n_seg = _per_shard(n_segments)
+    sharded = f" (per-shard of {_DATA_SHARDS} data shards)" \
+        if _DATA_SHARDS > 1 else ""
+    if n_seg > MAX_SEGMENTS:
+        return Decision(False,
+                        f"n_segments {n_seg}{sharded} > {MAX_SEGMENTS}")
     if d > MAX_FEATURE_DIM:
         return Decision(False, f"feature width {d} > {MAX_FEATURE_DIM}")
-    e_block = choose_e_block(n_segments, d, itemsize, reduce=base,
-                             n_edges=int(shape[0]))
+    e_block = choose_e_block(n_seg, d, itemsize, reduce=base,
+                             n_edges=n_rows)
     if e_block == 0:
-        return Decision(False, "working set exceeds VMEM budget")
-    return Decision(True, "kernel", e_block, interpret=not _on_tpu())
+        return Decision(False,
+                        f"working set exceeds VMEM budget{sharded}")
+    return Decision(True, f"kernel{sharded}", e_block,
+                    interpret=not _on_tpu())
 
 
 def segment_reduce(values, seg_ids, n_segments: int, reduce: str = "sum"):
@@ -302,15 +354,22 @@ def edge_mpnn_decision(n_src: int, n_tgt: int, ds: int, dt: int, m: int,
         return Decision(False, f"unsupported dtype {dtype}")
     if n_edges == 0:
         return Decision(False, "no edges (empty grid)")
-    if max(n_src, n_tgt) > MAX_SEGMENTS:
-        return Decision(False, f"node count > {MAX_SEGMENTS}")
+    n_src_s, n_tgt_s = _per_shard(n_src), _per_shard(n_tgt)
+    sharded = f" (per-shard of {_DATA_SHARDS} data shards)" \
+        if _DATA_SHARDS > 1 else ""
+    if max(n_src_s, n_tgt_s) > MAX_SEGMENTS:
+        return Decision(False, f"node count{sharded} > {MAX_SEGMENTS}")
     if m > MAX_FEATURE_DIM:
         return Decision(False, f"message width {m} > {MAX_FEATURE_DIM}")
-    e_block = choose_mpnn_e_block(n_src, n_tgt, ds, dt, m, dtype.itemsize,
-                                  n_edges=n_edges)
+    e_block = choose_mpnn_e_block(n_src_s, n_tgt_s, ds, dt, m,
+                                  dtype.itemsize,
+                                  n_edges=None if n_edges is None
+                                  else _per_shard(n_edges))
     if e_block == 0:
-        return Decision(False, "working set exceeds VMEM budget")
-    return Decision(True, "kernel", e_block, interpret=not _on_tpu())
+        return Decision(False,
+                        f"working set exceeds VMEM budget{sharded}")
+    return Decision(True, f"kernel{sharded}", e_block,
+                    interpret=not _on_tpu())
 
 
 def edge_mpnn(h_src, h_tgt, src, tgt, w, b, *, n_src: int, n_tgt: int,

@@ -58,6 +58,16 @@ class RootNodeMulticlassClassification(Task):
     def head(self) -> Module:
         return Linear(self.hidden_dim, self.num_classes)
 
+    @staticmethod
+    def root_labels(sizes_row: np.ndarray, labels_row: np.ndarray
+                    ) -> np.ndarray:
+        """Host-side counterpart of :meth:`root_states`: per-component
+        root (= first node) labels from one padded node set's ``sizes``
+        row and per-node labels row.  The single owner of the
+        root-index-is-component-start contract for data pipelines."""
+        starts = np.concatenate([[0], np.cumsum(sizes_row)[:-1]])
+        return labels_row[np.minimum(starts, len(labels_row) - 1)]
+
     def root_states(self, graph: GraphTensor) -> jnp.ndarray:
         """Hidden state of each component's root = first node (the sampler
         puts the seed first; see repro.data.sampling)."""
@@ -120,12 +130,25 @@ def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
         eval_batches: Optional[Callable[[], Iterator]] = None,
         ckpt_dir: str = "",
         log_every: int = 20,
-        seed: int = 0) -> RunResult:
+        seed: int = 0,
+        num_devices: Optional[int] = None,
+        max_steps: Optional[int] = None) -> RunResult:
     """The paper's runner.run(): wires data, model, task, trainer.
 
     model_fn() -> (init_states_module, gnn_module); both take/return
     GraphTensors (MapFeatures-style + GraphUpdate stack).
     train_batches(epoch) yields (padded GraphTensor, labels[C]).
+
+    With ``num_devices`` the runner trains data-parallel over a
+    ``("data",)`` mesh: train_batches must yield stacked super-batches
+    ([R, ...] component groups from ``GraphBatcher(num_replicas=R)``,
+    labels [R, C]); scalar batches are promoted to [1, ...].  The train
+    step becomes the pjit'd shard_map step of
+    ``repro.distributed.graph_sharding`` — per-shard forward/backward,
+    cross-replica gradient psum, replicated optimizer update — and batches
+    are device_put with NamedShardings over the data axis.  Loss equals
+    the 1-device run on the same seed (component groups are weighted
+    equally, so the mean-of-group-means is the global mean).
     """
     init_states, gnn = model_fn()
     head = task.head()
@@ -156,24 +179,51 @@ def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
         params, opt_state, om = opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
-    @jax.jit
-    def eval_step(params, graph, labels):
+    def metric_fn(params, graph, labels):
         logits = forward(params, graph)
         weights = graph.context.sizes.astype(jnp.float32)
         pred = jnp.argmax(logits, -1)
         correct = ((pred == labels) * weights).sum()
         return correct, weights.sum()
 
+    eval_step = jax.jit(metric_fn)
+
+    mesh = None
+    dp_train_step = dp_eval_step = None
+    if num_devices is not None:
+        from repro.distributed import graph_sharding as gsh
+        mesh = gsh.make_data_mesh(num_devices)
+
+    def place(graph, labels):
+        """Host batch -> device batch (sharded over the mesh in dp mode)."""
+        if mesh is not None:
+            return gsh.put_super_batch(graph, labels, mesh)
+        return (jax.tree_util.tree_map(jnp.asarray, graph),
+                jnp.asarray(labels))
+
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     step = 0
     last_loss = float("nan")
     t0 = time.time()
     for epoch in range(epochs):
+        if max_steps is not None and step >= max_steps:
+            break
         for graph, labels in train_batches(epoch):
-            graph = jax.tree_util.tree_map(jnp.asarray, graph)
-            labels = jnp.asarray(labels)
-            params, opt_state, loss = train_step(params, opt_state, graph,
-                                                 labels)
+            if max_steps is not None and step >= max_steps:
+                break
+            graph, labels = place(graph, labels)
+            if mesh is not None:
+                if dp_train_step is None:
+                    from repro.core.graph_tensor import stack_size
+                    dp_train_step = gsh.make_dp_train_step(
+                        mesh, loss_fn, opt, num_groups=stack_size(graph))
+                    params = gsh.replicate(params, mesh)
+                    opt_state = gsh.replicate(opt_state, mesh)
+                params, opt_state, loss = dp_train_step(
+                    params, opt_state, graph, labels)
+            else:
+                params, opt_state, loss = train_step(params, opt_state,
+                                                     graph, labels)
             step += 1
             last_loss = float(loss)
             if step % log_every == 0:
@@ -188,8 +238,13 @@ def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
     if eval_batches is not None:
         correct = total = 0.0
         for graph, labels in eval_batches():
-            graph = jax.tree_util.tree_map(jnp.asarray, graph)
-            c, n = eval_step(params, graph, jnp.asarray(labels))
+            graph, labels = place(graph, labels)
+            if mesh is not None:
+                if dp_eval_step is None:
+                    dp_eval_step = gsh.make_dp_eval_step(mesh, metric_fn)
+                c, n = dp_eval_step(params, graph, labels)
+            else:
+                c, n = eval_step(params, graph, labels)
             correct += float(c)
             total += float(n)
         metrics["eval_accuracy"] = correct / max(total, 1.0)

@@ -104,7 +104,18 @@ def _split_microbatches(batch, n_micro: int):
 def make_train_step(model, cfg: ArchConfig, optimizer, *,
                     n_microbatches: int = 1,
                     grad_compression=None,
-                    param_axes=None) -> Callable:
+                    param_axes=None,
+                    mesh=None) -> Callable:
+    """Build the train step.
+
+    With ``mesh`` the returned step is pjit'd for data parallelism: every
+    batch leaf's leading dim is constrained over the mesh's data axes
+    (GSPMD then partitions the loss and inserts the cross-replica gradient
+    psum where sharded activations meet replicated/FSDP params), and the
+    body is traced under ``kernels.dispatch.data_parallel`` so kernel
+    eligibility budgets VMEM from per-shard — not global — batch shapes.
+    Without ``mesh`` the step is returned un-jitted, as before.
+    """
     loss_fn = make_loss_fn(model, cfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     if param_axes is None:
@@ -155,7 +166,30 @@ def make_train_step(model, cfg: ArchConfig, optimizer, *,
         metrics.update(opt_metrics)
         return params, opt_state, metrics
 
-    return train_step
+    if mesh is None:
+        return train_step
+
+    from jax.sharding import NamedSharding
+    from repro.distributed.graph_sharding import data_spec
+    from repro.distributed.sharding import data_parallel_size
+    from repro.kernels import dispatch as kernel_dispatch
+    dp_size = data_parallel_size(mesh)
+    batch_spec = data_spec(mesh)
+
+    def constrain_batch(batch):
+        def c(x):
+            if x.ndim and x.shape[0] % dp_size == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, batch_spec))
+            return x
+        return jax.tree_util.tree_map(c, batch)
+
+    def dp_step(params, opt_state, batch):
+        with kernel_dispatch.data_parallel(dp_size):
+            return train_step(params, opt_state, constrain_batch(batch))
+
+    # donate replicated state: see graph_sharding.make_dp_train_step
+    return jax.jit(dp_step, donate_argnums=(0, 1))
 
 
 def make_eval_step(model, cfg: ArchConfig) -> Callable:

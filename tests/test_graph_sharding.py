@@ -1,0 +1,414 @@
+"""Data-parallel GraphTensor training: pytree round-trips (stack/unstack,
+flatten/unflatten under jit and vmap), super-batch batching, sharding
+decisions, SizeConstraints errors, and loss parity across device counts."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph_tensor import (Adjacency, Context, EdgeSet,
+                                     GraphTensor, NodeSet, stack_graphs,
+                                     stack_size, unstack_graph)
+from repro.data.batching import (SizeConstraints, find_size_constraints,
+                                 merge_graphs, pad_to_sizes)
+from repro.data.pipeline import GraphBatcher
+
+from conftest import make_graph
+
+
+def tiny_graph(seed=0, *, n_nodes=5, n_edges=6, with_empty_edge_set=True,
+               pad_components=1):
+    """Scalar GraphTensor with a zero-size padding component and
+    (optionally) an edge set of capacity 0."""
+    rng = np.random.default_rng(seed)
+    sizes = np.asarray([1] * 1 + [0] * pad_components, np.int32)
+    node_sizes = np.asarray([n_nodes] + [0] * pad_components, np.int32)
+    edge_sizes = np.asarray([n_edges] + [0] * pad_components, np.int32)
+    edge_sets = {
+        "e": EdgeSet(edge_sizes,
+                     Adjacency(rng.integers(0, n_nodes, n_edges)
+                               .astype(np.int32),
+                               rng.integers(0, n_nodes, n_edges)
+                               .astype(np.int32), "n", "n"),
+                     {"w": rng.normal(size=(n_edges,)).astype(np.float32)},
+                     n_edges)}
+    if with_empty_edge_set:
+        edge_sets["empty"] = EdgeSet(
+            np.zeros(1 + pad_components, np.int32),
+            Adjacency(np.zeros((0,), np.int32), np.zeros((0,), np.int32),
+                      "n", "n"), {}, 0)
+    return GraphTensor(
+        Context(sizes, {"c": rng.normal(size=(len(sizes), 2))
+                        .astype(np.float32)}),
+        {"n": NodeSet(node_sizes,
+                      {"h": rng.normal(size=(n_nodes, 4))
+                       .astype(np.float32)}, n_nodes)},
+        edge_sets)
+
+
+# ---------------------------------------------------------------------------
+# SizeConstraints.validate / pad_to_sizes errors (no bare asserts)
+# ---------------------------------------------------------------------------
+
+def test_validate_names_offending_node_set():
+    g = make_graph()
+    sizes = SizeConstraints(total_num_components=2,
+                            total_num_nodes={"users": 2, "items": 99},
+                            total_num_edges={"purchased": 99,
+                                             "is-friend": 99})
+    with pytest.raises(ValueError, match="node set 'users'"):
+        sizes.validate(g)
+
+
+def test_validate_names_offending_edge_set():
+    g = make_graph()
+    sizes = SizeConstraints(total_num_components=2,
+                            total_num_nodes={"users": 99, "items": 99},
+                            total_num_edges={"purchased": 1,
+                                             "is-friend": 99})
+    with pytest.raises(ValueError, match="edge set 'purchased'"):
+        sizes.validate(g)
+
+
+def test_validate_names_missing_set():
+    g = make_graph()
+    sizes = SizeConstraints(total_num_components=2,
+                            total_num_nodes={"users": 99},
+                            total_num_edges={"purchased": 99,
+                                             "is-friend": 99})
+    with pytest.raises(ValueError, match="items"):
+        sizes.validate(g)
+
+
+def test_validate_survives_python_O_semantics(tmp_path):
+    """The check must be a real raise, not an assert (python -O)."""
+    script = tmp_path / "opt.py"
+    script.write_text(textwrap.dedent("""
+        import sys
+        sys.path.insert(0, "tests")
+        from conftest import make_graph
+        from repro.data.batching import SizeConstraints
+        s = SizeConstraints(2, {"users": 2, "items": 99},
+                            {"purchased": 99, "is-friend": 99})
+        try:
+            s.validate(make_graph())
+            print("NORAISE")
+        except ValueError as e:
+            print("RAISED", "users" in str(e))
+    """))
+    env = dict(os.environ, PYTHONPATH=os.path.abspath("src"))
+    res = subprocess.run([sys.executable, "-O", str(script)], env=env,
+                         capture_output=True, text=True, timeout=120,
+                         cwd=os.getcwd())
+    assert "RAISED True" in res.stdout, (res.stdout, res.stderr[-1000:])
+
+
+def test_pad_to_sizes_reports_set_name():
+    g = merge_graphs([make_graph()])
+    sizes = SizeConstraints(total_num_components=3,
+                            total_num_nodes={"users": 2, "items": 99},
+                            total_num_edges={"purchased": 99,
+                                             "is-friend": 99})
+    with pytest.raises(ValueError, match="'users'"):
+        pad_to_sizes(g, sizes)
+
+
+# ---------------------------------------------------------------------------
+# stack/unstack + pytree round-trips under jit and vmap
+# ---------------------------------------------------------------------------
+
+def _assert_graphs_equal(a: GraphTensor, b: GraphTensor):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_stack_unstack_identity():
+    gs = [tiny_graph(seed=i) for i in range(3)]
+    stacked = stack_graphs(gs)
+    assert stack_size(stacked) == 3
+    assert stack_size(gs[0]) is None
+    for orig, back in zip(gs, unstack_graph(stacked)):
+        _assert_graphs_equal(orig, back)
+
+
+def test_stack_rejects_mismatched_structure():
+    with pytest.raises(ValueError, match="structurally identical"):
+        stack_graphs([tiny_graph(), tiny_graph(n_nodes=7)])
+
+
+def test_tree_flatten_unflatten_identity():
+    g = tiny_graph()
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    _assert_graphs_equal(g, jax.tree_util.tree_unflatten(treedef, leaves))
+
+
+def test_pytree_roundtrip_under_jit():
+    g = jax.tree_util.tree_map(jnp.asarray, tiny_graph())
+    out = jax.jit(lambda gg: gg)(g)
+    _assert_graphs_equal(g, out)
+    # ...and through a computation using the empty edge set's structure
+    tot = jax.jit(lambda gg: gg.node_sets["n"]["h"].sum()
+                  + gg.edge_sets["e"]["w"].sum())(g)
+    assert np.isfinite(float(tot))
+
+
+def test_pytree_roundtrip_under_vmap():
+    gs = [tiny_graph(seed=i) for i in range(4)]
+    stacked = jax.tree_util.tree_map(jnp.asarray, stack_graphs(gs))
+    out = jax.vmap(lambda gg: gg)(stacked)
+    _assert_graphs_equal(stacked, out)
+    per_group = jax.vmap(
+        lambda gg: gg.node_sets["n"]["h"].sum()
+        + gg.context["c"].sum())(stacked)
+    assert per_group.shape == (4,)
+    ref = [float(g.node_sets["n"]["h"].sum() + g.context["c"].sum())
+           for g in gs]
+    np.testing.assert_allclose(np.asarray(per_group), ref, rtol=1e-5)
+
+
+def test_jit_vmap_roundtrip_on_stacked_batcher_output():
+    graphs = [make_graph(seed=i) for i in range(8)]
+    sizes = find_size_constraints(graphs, 2)
+    batcher = GraphBatcher(graphs, 8, sizes, seed=0, num_replicas=4)
+    stacked = next(iter(batcher.epoch(0)))
+    stacked = jax.tree_util.tree_map(jnp.asarray, stacked)
+    _assert_graphs_equal(stacked, jax.jit(lambda g: g)(stacked))
+    _assert_graphs_equal(stacked, jax.vmap(lambda g: g)(stacked))
+
+
+# ---------------------------------------------------------------------------
+# GraphBatcher super-batches
+# ---------------------------------------------------------------------------
+
+def test_super_batch_matches_manual_groups():
+    graphs = [make_graph(seed=i) for i in range(8)]
+    sizes = find_size_constraints(graphs, 2)
+    batcher = GraphBatcher(graphs, 8, sizes, seed=3, num_replicas=4)
+    stacked = next(iter(batcher.epoch(0)))
+    assert stack_size(stacked) == 4
+
+    order = np.random.default_rng((3, 0)).permutation(8)
+    manual = [pad_to_sizes(merge_graphs(
+        [graphs[i] for i in order[r * 2:(r + 1) * 2]]), sizes)
+        for r in range(4)]
+    _assert_graphs_equal(stacked, stack_graphs(manual))
+
+
+def test_super_batch_legacy_contract_unchanged():
+    graphs = [make_graph(seed=i) for i in range(4)]
+    sizes = find_size_constraints(graphs, 4)
+    legacy = next(iter(GraphBatcher(graphs, 4, sizes, seed=0).epoch(0)))
+    assert stack_size(legacy) is None  # scalar GraphTensor, as before
+
+
+def test_super_batch_divisibility_error():
+    graphs = [make_graph(seed=i) for i in range(6)]
+    sizes = find_size_constraints(graphs, 2)
+    with pytest.raises(ValueError, match="num_replicas"):
+        GraphBatcher(graphs, 6, sizes, num_replicas=4)
+
+
+# ---------------------------------------------------------------------------
+# Sharding: rule-table specs + per-shard dispatch eligibility
+# ---------------------------------------------------------------------------
+
+def test_graph_shardings_use_data_axis():
+    from repro.distributed import graph_sharding as gsh
+    mesh = gsh.make_data_mesh(1)
+    stacked = stack_graphs([tiny_graph(0), tiny_graph(1)])
+    shardings = jax.tree_util.tree_leaves(
+        gsh.graph_shardings(mesh, stacked))
+    assert shardings, "no leaves"
+    for s in shardings:
+        assert s.spec[0] == "data"  # leading group axis shards over data
+        assert all(ax is None for ax in s.spec[1:])
+
+
+def test_put_super_batch_promotes_scalar():
+    from repro.distributed import graph_sharding as gsh
+    mesh = gsh.make_data_mesh(1)
+    g, labels = gsh.put_super_batch(tiny_graph(), np.zeros(2, np.int32),
+                                    mesh)
+    assert stack_size(g) == 1 and labels.shape == (1, 2)
+
+
+def test_dispatch_data_parallel_budgets_per_shard():
+    from repro.kernels import dispatch
+
+    was = dispatch.enabled()
+    dispatch.enable(True)
+    try:
+        local = dispatch.segment_reduce_decision((1024, 64), jnp.float32,
+                                                 512)
+        with dispatch.data_parallel(8):
+            glob = dispatch.segment_reduce_decision((8 * 1024, 64),
+                                                    jnp.float32, 8 * 512)
+        assert glob.use_kernel == local.use_kernel
+        assert glob.e_block == local.e_block
+        assert "per-shard" in glob.reason
+
+        # globally over the segment cap, per-shard eligible
+        n_seg = dispatch.MAX_SEGMENTS * 4
+        unsharded = dispatch.segment_reduce_decision((4096, 8),
+                                                     jnp.float32, n_seg)
+        assert not unsharded.use_kernel
+        with dispatch.data_parallel(8):
+            sharded = dispatch.segment_reduce_decision((4096, 8),
+                                                       jnp.float32, n_seg)
+        assert sharded.use_kernel
+
+        # edge_mpnn: same per-shard node budgeting
+        n = dispatch.MAX_SEGMENTS * 2
+        assert not dispatch.edge_mpnn_decision(n, n, 32, 32, 32,
+                                               jnp.float32,
+                                               n_edges=4096).use_kernel
+        with dispatch.data_parallel(4):
+            assert dispatch.edge_mpnn_decision(n, n, 32, 32, 32,
+                                               jnp.float32,
+                                               n_edges=4096).use_kernel
+    finally:
+        dispatch.enable(was)
+    assert dispatch.data_shards() == 1  # context restored
+
+
+# ---------------------------------------------------------------------------
+# Loss parity: dp runner path == plain path, and across device counts
+# ---------------------------------------------------------------------------
+
+def _mag_run(num_devices, num_replicas, n_graphs=48, bs=8, steps=3):
+    from repro.core import HIDDEN_STATE, mag_schema
+    from repro.core.models import vanilla_mpnn
+    from repro.data import (InMemorySampler, SamplingSpecBuilder,
+                            find_size_constraints)
+    from repro.data.synthetic import synthetic_mag
+    from repro.nn.layers import Linear
+    from repro.nn.module import Module
+    from repro.orchestration import (RootNodeMulticlassClassification, run)
+
+    store, _ = synthetic_mag(n_papers=64, n_authors=32, n_institutions=5,
+                             n_fields=10, n_classes=4, feat_dim=16)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    seed_op.sample(4, "cites")
+    spec = seed_op.build()
+    graphs = InMemorySampler(store, spec, seed=0).sample(range(n_graphs))
+    dim = 16
+    sizes = find_size_constraints(graphs, bs // (num_replicas or 1))
+
+    class Init(Module):
+        def __init__(self):
+            self.lin = Linear(16, dim)
+
+        def init(self, key):
+            return {"lin": self.lin.init(key)}
+
+        def __call__(self, params, graph):
+            return graph.replace_features(node_sets={
+                "paper": {HIDDEN_STATE: jax.nn.relu(self.lin(
+                    params["lin"], graph.node_sets["paper"]["feat"]))}})
+
+    gnn = vanilla_mpnn({"cites": ("paper", "paper")}, {"paper": dim},
+                       message_dim=dim, hidden_dim=dim, num_rounds=1)
+    task = RootNodeMulticlassClassification("paper", 4, dim)
+
+    def gen(epoch):
+        batcher = GraphBatcher(graphs, bs, sizes, seed=0,
+                               num_replicas=num_replicas)
+        for graph in batcher.epoch(epoch):
+            arr = np.asarray(graph.node_sets["paper"].sizes)
+            lab = np.asarray(graph.node_sets["paper"]["labels"])
+            if arr.ndim == 1:
+                arr, lab = arr[None], lab[None]
+            labels = np.stack([
+                RootNodeMulticlassClassification.root_labels(arr[r],
+                                                             lab[r])
+                for r in range(arr.shape[0])]).astype(np.int32)
+            yield graph, (labels if num_replicas is not None
+                          else labels[0])
+        return
+
+    return run(train_batches=gen, model_fn=lambda: (Init(), gnn),
+               task=task, epochs=1, learning_rate=1e-2, total_steps=50,
+               log_every=10 ** 9, num_devices=num_devices,
+               max_steps=steps)
+
+
+def test_dp_runner_matches_plain_runner():
+    """shard_map dp step (1-device mesh, 4 component groups) trains to the
+    same loss as the plain jit path on the same global batch."""
+    plain = _mag_run(num_devices=None, num_replicas=None)
+    dp = _mag_run(num_devices=1, num_replicas=4)
+    assert abs(plain.train_loss - dp.train_loss) < 1e-4
+
+
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    sys.path.insert(0, "tests")
+    import jax, numpy as np
+    from test_graph_sharding import _mag_run
+    from repro.distributed import graph_sharding as gsh
+    from repro.core.graph_tensor import stack_graphs
+    from test_graph_sharding import tiny_graph
+
+    one = _mag_run(num_devices=1, num_replicas=8)
+    eight = _mag_run(num_devices=8, num_replicas=8)
+    # input leaves really are sharded over all 8 devices
+    mesh = gsh.make_data_mesh(8)
+    stacked = stack_graphs([tiny_graph(i) for i in range(8)])
+    g, _ = gsh.put_super_batch(stacked, np.zeros((8, 2), np.int32), mesh)
+    leaf = g.node_sets["n"]["h"]
+    assert len(leaf.sharding.device_set) == 8, leaf.sharding
+    assert leaf.addressable_shards[0].data.shape[0] == 1
+    print("PARITY", json.dumps({"one": one.train_loss,
+                                "eight": eight.train_loss}))
+""")
+
+
+def test_dp_loss_matches_across_device_counts(tmp_path):
+    """8 fake CPU devices: the same super-batch program at mesh sizes 1
+    and 8 reaches the same loss to 1e-4, with batches sharded 8 ways."""
+    script = tmp_path / "parity.py"
+    script.write_text(PARITY_SCRIPT)
+    env = dict(os.environ, PYTHONPATH=os.path.abspath("src"))
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.getcwd())
+    assert "PARITY" in res.stdout, (res.stdout[-2000:], res.stderr[-2000:])
+    import json
+    payload = json.loads(res.stdout.split("PARITY", 1)[1])
+    assert abs(payload["one"] - payload["eight"]) < 1e-4, payload
+
+
+# ---------------------------------------------------------------------------
+# train_loop: pjit'd LM step with a mesh
+# ---------------------------------------------------------------------------
+
+def test_make_train_step_with_mesh_runs():
+    from repro.configs.base import smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import pick_optimizer
+    from repro.models.registry import build_model, get_config
+    from repro.nn.module import split_params
+    from repro.train.train_loop import make_train_step
+
+    cfg = smoke_config(get_config("qwen1.5-4b"))
+    model = build_model(cfg)
+    opt = pick_optimizer(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0)))
+    opt_state = opt.init(params)
+    mesh = make_host_mesh(1, shape=(1, 1))
+    step = make_train_step(model, cfg, opt, mesh=mesh)
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
