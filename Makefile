@@ -32,10 +32,14 @@ smoke:
 	    --papers 320
 	$(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 1 \
 	    --papers 320
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
+	    --papers 320 --sampler service
 
 bench:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch
 	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
+	$(PYTHON) -m benchmarks.run --quick --only sampler_service
 
 check-bench:
 	rm -rf $(BENCH_BASELINE)
@@ -45,7 +49,10 @@ check-bench:
 	                            # committed baseline behind as "fresh"
 	$(MAKE) bench
 	$(PYTHON) scripts/check_bench.py --baseline $(BENCH_BASELINE) \
-	    --fresh results
+	    --fresh results \
+	    --require BENCH_sampler_service.json \
+	    --require BENCH_dp_scaling.json \
+	    --require BENCH_segment_pool_dispatch.json
 
 bench-dispatch:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch

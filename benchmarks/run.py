@@ -538,6 +538,150 @@ def bench_dp_scaling(quick: bool):
     }, indent=1))
 
 
+def bench_sampler_service(quick: bool):
+    """Async sampling service vs in-process sampling on the trainer path.
+
+    The gated regime is a *training loop*: the consumer "trains" for a
+    fixed simulated step time (a sleep — the accelerator owns the step;
+    host cores belong to input processing) and we measure
+
+    * sustained batches/s: steps completed / wall-clock, and
+    * trainer idle fraction: the share of wall-clock spent BLOCKED
+      waiting for the next batch.
+
+    In-process, Algorithm 1 sampling + merge + pad sit on the trainer
+    path, so every step pays production + train serially; the service
+    overlaps its worker fleet with the trainer (client-side double
+    buffer), so sustained throughput approaches 1/train_step once enough
+    workers feed it.  A raw drain (no train step) batches/s is also
+    recorded, ungated: on a box with fewer cores than fleet+trainer it
+    measures scheduler contention, not the service (see note).
+
+    Written to results/BENCH_sampler_service.json with gates: the async
+    path must be no slower at 1 worker and strictly faster at 2 (the
+    Serafini & Guan sampler/trainer-split claim, scaled to this box), and
+    must cut the trainer idle fraction below the in-process path's.
+    """
+    import time as _time
+    from repro.core.schema import mag_schema
+    from repro.data import (InMemorySampler, SamplingSpecBuilder,
+                            find_size_constraints)
+    from repro.data.grouping import BatchPlan, build_batch
+    from repro.data.pipeline import prefetch
+    from repro.data.synthetic import synthetic_mag
+    from repro.sampling_service import SamplingService
+
+    store, _ = synthetic_mag(n_papers=2000, n_authors=1000,
+                             n_institutions=50, n_fields=100)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    cited = seed_op.sample(8, "cites")
+    authors = cited.join([seed_op]).sample(4, "written")
+    authors.sample(4, "affiliated_with")
+    spec = seed_op.build()
+
+    bs = 16
+    n_steps = 8 if quick else 16
+    roots = list(range(bs * n_steps))
+    sampler = InMemorySampler(store, spec, seed=0)
+    sizes = find_size_constraints(sampler.sample(roots[:2 * bs]), bs)
+    plan = BatchPlan(bs, seed=0, num_replicas=1)
+    train_s = 0.004  # simulated accelerator step (sleep releases the GIL)
+
+    def consume(stream, step_time):
+        wait, n = 0.0, 0
+        t0 = _time.perf_counter()
+        it = iter(stream)
+        while True:
+            tw = _time.perf_counter()
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            wait += _time.perf_counter() - tw
+            n += 1
+            if step_time:
+                _time.sleep(step_time)
+        return _time.perf_counter() - t0, wait, n
+
+    def inprocess_epoch(epoch):
+        order = plan.order(epoch, len(roots))
+        for step in range(plan.num_steps(len(roots))):
+            idx = plan.step_indices(order, step)
+            yield build_batch(sampler.sample([roots[i] for i in idx]),
+                              plan, sizes)
+
+    repeats = 3  # best-of: the 1-worker pipeline is scheduler-sensitive
+    paths = {}  # name -> (sustained batches/s, idle_frac, drain batches/s)
+
+    def measure(name, make_stream):
+        consume(make_stream(99), 0.0)  # warmup: fork/JIT/first-batch latency
+        best_thr, best_idle, best_drain = 0.0, 1.0, 0.0
+        for rep in range(repeats):
+            elapsed, _, n = consume(make_stream(2 * rep), 0.0)
+            best_drain = max(best_drain, n / elapsed)
+            elapsed, wait, n = consume(make_stream(2 * rep + 1), train_s)
+            best_thr = max(best_thr, n / elapsed)
+            best_idle = min(best_idle, wait / elapsed)
+        paths[name] = (best_thr, best_idle, best_drain)
+        emit(f"sampler_service_{name}", 1e6 / best_thr,
+             f"batches_per_s={best_thr:.2f};idle_frac={best_idle:.3f};"
+             f"drain_batches_per_s={best_drain:.2f}")
+
+    measure("inprocess", inprocess_epoch)
+    for nw in (1, 2):
+        with SamplingService(store, spec, roots, batch_size=bs, sizes=sizes,
+                             num_workers=nw, num_replicas=1,
+                             seed=0, base_seed=0) as svc:
+            # depth-2 client prefetch = the trainer's double buffer
+            measure(f"service_{nw}w",
+                    lambda e, s=svc: prefetch(s.epoch(e), depth=2))
+
+    thr = {k: v[0] for k, v in paths.items()}
+    idle = {k: v[1] for k, v in paths.items()}
+    drain = {k: v[2] for k, v in paths.items()}
+    ratio_1w = thr["service_1w"] / thr["inprocess"]
+    ratio_2w = thr["service_2w"] / thr["inprocess"]
+    emit("sampler_service_speedup", 0.0,
+         f"ratio_1w={ratio_1w:.2f};ratio_2w={ratio_2w:.2f};"
+         f"idle_inprocess={idle['inprocess']:.3f};"
+         f"idle_2w={idle['service_2w']:.3f}")
+    out_path = Path("results/BENCH_sampler_service.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps({
+        "benchmark": "sampler_service",
+        "workload": {"batch_size": bs, "steps_per_epoch": n_steps,
+                     "sampling_ops": len(spec.sampling_ops),
+                     "simulated_train_step_s": train_s},
+        "batches_per_s": thr,
+        "trainer_idle_frac": idle,
+        "drain_batches_per_s": drain,
+        "throughput_ratio_service_1w_vs_inprocess": ratio_1w,
+        "throughput_ratio_service_2w_vs_inprocess": ratio_2w,
+        "host_cores": os.cpu_count(),
+        "note": "batches_per_s/idle_frac: sustained training regime (the "
+                "consumer sleeps simulated_train_step_s per batch, as an "
+                "accelerator step would); sampling+merge+pad run on the "
+                "trainer path in-process vs in the worker fleet for the "
+                "service.  drain_batches_per_s (ungated) is a no-train "
+                "drain: with fewer host cores than fleet+trainer it "
+                "measures scheduler contention, not the service.",
+        "gates": {
+            # the async path must not regress single-worker throughput
+            # (0.85 = "no slower" minus best-of-3 scheduler noise on a
+            # 2-core box; typical observed 1.2-1.5)
+            "throughput_ratio_service_1w_vs_inprocess": {"min": 0.85},
+            # ...and must beat the in-process path with 2 workers
+            # (ISSUE-3 acceptance: >=2-worker throughput above the
+            # 1-worker in-process baseline)
+            "throughput_ratio_service_2w_vs_inprocess": {"min": 1.1},
+            # the trainer must not sit starved behind the fleet
+            # (in-process idle runs ~0.6-0.75 on this workload)
+            "trainer_idle_frac.service_2w": {"max": 0.6},
+        },
+    }, indent=1))
+
+
 def bench_archs(quick: bool):
     """Roofline-derived per-step seconds per (arch × shape) from dry-run."""
     path = Path("results/dryrun.json")
@@ -570,6 +714,7 @@ def main(argv=None):
         "kernels": bench_kernels,
         "dispatch": bench_dispatch,
         "dp_scaling": bench_dp_scaling,
+        "sampler_service": bench_sampler_service,
         "archs": bench_archs,
     }
     for name, fn in sections.items():

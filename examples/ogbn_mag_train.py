@@ -16,6 +16,16 @@ loss matches the 1-device run on the same seed:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
         python examples/ogbn_mag_train.py --steps 3 --num-devices 8
+
+With ``--sampler service`` the training stream comes from the async
+sampling service instead (repro.sampling_service): a fleet of sampler
+worker processes runs Algorithm 1 + merge + pad off the training host
+path and streams padded super-batches over length-prefixed socket frames,
+double-buffered onto the mesh.  Same plan, same per-root sampling seeds
+=> bit-identical batches => the same loss as the in-process path:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+        python examples/ogbn_mag_train.py --sampler service --num-devices 8
 """
 import argparse
 import tempfile
@@ -27,11 +37,12 @@ from repro.core import HIDDEN_STATE, mag_schema
 from repro.core.models import vanilla_mpnn
 from repro.data import (GraphBatcher, SamplingSpecBuilder,
                         distributed_sample, find_size_constraints,
-                        load_graphs)
+                        load_graphs, shard_partition)
 from repro.data.synthetic import synthetic_mag
 from repro.nn.layers import Embedding, Linear
 from repro.nn.module import Module
 from repro.orchestration import RootNodeMulticlassClassification, run
+from repro.sampling_service import SamplingService
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--papers", type=int, default=1200)
@@ -42,6 +53,13 @@ ap.add_argument("--steps", type=int, default=None,
 ap.add_argument("--num-devices", type=int, default=1,
                 help="data-parallel replicas; >1 needs that many devices "
                      "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+ap.add_argument("--sampler", choices=["inprocess", "service"],
+                default="inprocess",
+                help="'service' streams training batches from the async "
+                     "sampler fleet (identical loss, sampling off the "
+                     "trainer host path)")
+ap.add_argument("--sampler-workers", type=int, default=2,
+                help="sampler fleet size for --sampler service")
 args = ap.parse_args()
 
 # 1. problem identification + schema (paper §8.1)
@@ -62,13 +80,20 @@ author_papers.join([seed_op, cited]).sample(4, "has_topic")
 spec = seed_op.build()
 print("sampling ops:", [op.op_name for op in spec.sampling_ops])
 
+num_shards = 4
 with tempfile.TemporaryDirectory() as tmp:
     n_train = int(args.papers * 0.75)
     shards = distributed_sample(store, spec, range(args.papers), tmp,
-                                num_shards=4)
+                                num_shards=num_shards)
     graphs = [g for p in shards for g in load_graphs(p)]
-print(f"sampled {len(graphs)} rooted subgraphs via 4 shard workers")
+# roots in shard-file order — graphs[i] is the subgraph rooted at
+# root_order[i], sampled with seed_rng(0, root); the sampling service
+# reproduces graphs bit-identically from these roots
+root_order = np.concatenate(shard_partition(range(args.papers), num_shards))
+print(f"sampled {len(graphs)} rooted subgraphs via "
+      f"{num_shards} shard workers")
 train_graphs = graphs[:n_train]
+train_roots = root_order[:n_train]
 test_graphs = graphs[n_train:]
 
 # 3. modeling (paper §8.3: 4-round MPNN over all five edge sets)
@@ -118,30 +143,45 @@ sizes = find_size_constraints(graphs, bs // ndev)
 task = RootNodeMulticlassClassification("paper", 8, dim)
 
 
+def super_batch_labels(graph):
+    """Per-group root labels [R, C] from a stacked super-batch."""
+    root_labels = RootNodeMulticlassClassification.root_labels
+    arr = np.asarray(graph.node_sets["paper"].sizes)       # [R, C]
+    lab = np.asarray(graph.node_sets["paper"]["labels"])   # [R, cap]
+    return np.stack([
+        root_labels(arr[r], lab[r]) for r in range(arr.shape[0])
+    ]).astype(np.int32)
+
+
 def batches_for(gs):
     batcher = GraphBatcher(gs, bs, sizes, seed=0, num_replicas=ndev)
-    root_labels = RootNodeMulticlassClassification.root_labels
 
     def gen(epoch):
-        for graph in batcher.epoch(epoch % 5):
-            arr = np.asarray(graph.node_sets["paper"].sizes)   # [R, C]
-            lab = np.asarray(graph.node_sets["paper"]["labels"])
-            yield graph, np.stack([
-                root_labels(arr[r], lab[r]) for r in range(arr.shape[0])
-            ]).astype(np.int32)
+        for graph in batcher.epoch(epoch):
+            yield graph, super_batch_labels(graph)
 
     return gen
 
 
-result = run(train_batches=batches_for(train_graphs),
-             model_fn=lambda: (InitStates(), gnn), task=task,
-             epochs=args.epochs, learning_rate=3e-3, total_steps=600,
-             eval_batches=lambda: batches_for(test_graphs)(0),
-             ckpt_dir="", log_every=20, num_devices=ndev,
-             max_steps=args.steps)
+run_kwargs = dict(model_fn=lambda: (InitStates(), gnn), task=task,
+                  epochs=args.epochs, learning_rate=3e-3, total_steps=600,
+                  eval_batches=lambda: batches_for(test_graphs)(0),
+                  ckpt_dir="", log_every=20, num_devices=ndev,
+                  max_steps=args.steps)
+if args.sampler == "service":
+    # same plan (batch_size/seed/num_replicas) + same per-root sampling
+    # seeds as the in-process path => bit-identical batches, same loss —
+    # but Algorithm 1 + merge + pad run in the worker fleet, not here
+    with SamplingService(store, spec, train_roots, batch_size=bs,
+                         sizes=sizes, num_workers=args.sampler_workers,
+                         num_replicas=ndev, seed=0, base_seed=0) as svc:
+        result = run(sampler="service", service=svc,
+                     label_fn=super_batch_labels, **run_kwargs)
+else:
+    result = run(train_batches=batches_for(train_graphs), **run_kwargs)
 print(f"final loss {result.train_loss:.4f}  "
       f"test accuracy {result.metrics['eval_accuracy']:.4f}  "
-      f"({ndev} device(s), {result.step} steps)")
+      f"({ndev} device(s), {result.step} steps, {args.sampler} sampler)")
 if args.steps is None:  # full runs keep the accuracy gate; --steps N
     assert result.metrics["eval_accuracy"] > 0.5  # smoke runs skip it
 print("ogbn_mag_train OK")

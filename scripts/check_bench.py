@@ -107,6 +107,12 @@ def main(argv=None):
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="ignore baseline metrics faster than this "
                          "(timer noise floor)")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="BENCH_x.json",
+                    help="registered benchmark files that MUST be present "
+                         "in --fresh (a bench section that silently "
+                         "skipped/crashed fails the gate instead of "
+                         "vanishing); repeatable")
     args = ap.parse_args(argv)
 
     fresh_dir, base_dir = Path(args.fresh), Path(args.baseline)
@@ -117,6 +123,11 @@ def main(argv=None):
         return 1
 
     all_failures = []
+    for name in args.require:
+        if not (fresh_dir / name).exists():
+            all_failures.append(f"{name}: registered via --require but "
+                                "missing from fresh results")
+            print(f"  FAIL {all_failures[-1]}")
     for f in fresh_files:
         failures, notes = check_file(f, base_dir / f.name, args.tolerance,
                                      args.min_us)

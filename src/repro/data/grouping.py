@@ -1,0 +1,131 @@
+"""Batch planning + group merge/pad — the shared core of every batch
+producer.
+
+Extracted from `GraphBatcher` so that the in-process batcher
+(`repro.data.pipeline`) and the out-of-process sampler fleet
+(`repro.sampling_service`) produce *bit-identical* batches from one
+deterministic contract:
+
+    (dataset order, seed, epoch, step, rank/world, num_replicas)
+        -> one padded (super-)batch
+
+`BatchPlan` owns the pure index math: the per-epoch permutation, the
+per-rank step slice, and the per-replica component-group split.
+`build_batch` owns the array work: merge each group into one scalar
+GraphTensor (paper §3.2) and pad it to `SizeConstraints`, stacking groups
+on a leading ``[R, ...]`` axis when `num_replicas` is set.
+
+Because every batch is a pure function of the plan and the item list,
+re-executing a step is idempotent — the property the sampling service's
+rebalance-on-worker-loss leans on (same semantics as re-running a failed
+`distributed_sample` shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph_tensor import GraphTensor, stack_graphs
+from repro.data.batching import SizeConstraints, merge_graphs, pad_to_sizes
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Deterministic mapping from (epoch, step) to dataset indices.
+
+    * ``batch_size`` — global batch (across all ranks).
+    * ``rank``/``world`` — this consumer's shard of each step (the
+      multi-host data-parallel interface; world=1 on one host).
+    * ``num_replicas=R`` — this rank's items are split into R contiguous
+      component groups (the super-batch layout
+      `repro.distributed.graph_sharding` shards over the mesh);
+      ``None`` keeps the legacy one-scalar-batch contract.
+    """
+
+    batch_size: int
+    seed: int = 0
+    rank: int = 0
+    world: int = 1
+    num_replicas: Optional[int] = None
+
+    def __post_init__(self):
+        if self.batch_size % self.world:
+            raise ValueError(f"batch_size {self.batch_size} not divisible "
+                             f"by world {self.world}")
+        if self.num_replicas is not None:
+            if self.num_replicas < 1:
+                raise ValueError(f"num_replicas must be >= 1, "
+                                 f"got {self.num_replicas}")
+            if self.per_rank % self.num_replicas:
+                raise ValueError(
+                    f"per-rank batch {self.per_rank} not divisible by "
+                    f"num_replicas {self.num_replicas}")
+
+    @property
+    def per_rank(self) -> int:
+        return self.batch_size // self.world
+
+    @property
+    def per_group(self) -> int:
+        return self.per_rank // (self.num_replicas or 1)
+
+    def order(self, epoch: int, n_items: int) -> np.ndarray:
+        """The epoch's dataset permutation: (seed, epoch) -> order.  This
+        is the determinism anchor — every producer (batcher thread,
+        sampler worker, restarted replacement worker) derives the same
+        order independently."""
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(n_items)
+
+    def num_steps(self, n_items: int) -> int:
+        return n_items // self.batch_size
+
+    def step_indices(self, order: np.ndarray, step: int) -> np.ndarray:
+        """This rank's dataset indices for one step."""
+        lo = step * self.batch_size + self.rank * self.per_rank
+        return order[lo:lo + self.per_rank]
+
+
+def merge_and_pad(graphs: Sequence[GraphTensor],
+                  sizes: SizeConstraints) -> GraphTensor:
+    """One component group: merge (each graph -> one component) + pad."""
+    return pad_to_sizes(merge_graphs(graphs), sizes)
+
+
+def step_size_constraints(plan: BatchPlan,
+                          sizes: SizeConstraints) -> SizeConstraints:
+    """The constraints one step's batch is actually padded to.
+
+    Super-batch mode (``num_replicas`` set): `sizes` is already the
+    PER-GROUP constraint, used as given.  Legacy mode: `sizes` is the
+    GLOBAL batch constraint and this rank pads to its 1/world share.
+    Single owner of that rule — every producer (GraphBatcher, sampler
+    workers) must pad through here or multi-rank streams diverge."""
+    if plan.num_replicas is not None or plan.world == 1:
+        return sizes
+    return SizeConstraints(
+        total_num_components=plan.per_rank + 1,
+        total_num_nodes={k: max(v // plan.world, 8)
+                         for k, v in sizes.total_num_nodes.items()},
+        total_num_edges={k: max(v // plan.world, 8)
+                         for k, v in sizes.total_num_edges.items()})
+
+
+def build_batch(graphs: Sequence[GraphTensor], plan: BatchPlan,
+                sizes: SizeConstraints) -> GraphTensor:
+    """Assemble one step's batch from this rank's `per_rank` graphs (in
+    plan order).  With ``num_replicas=R``: R groups merged+padded to the
+    per-group `sizes` and stacked ``[R, ...]``; otherwise one scalar
+    GraphTensor padded to `sizes`."""
+    if len(graphs) != plan.per_rank:
+        raise ValueError(f"expected {plan.per_rank} graphs for one step, "
+                         f"got {len(graphs)}")
+    if plan.num_replicas is None:
+        return merge_and_pad(graphs, sizes)
+    groups = [
+        merge_and_pad(graphs[r * plan.per_group:(r + 1) * plan.per_group],
+                      sizes)
+        for r in range(plan.num_replicas)]
+    return stack_graphs(groups)

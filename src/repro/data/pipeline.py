@@ -4,19 +4,22 @@ The `GraphBatcher` is the tf.data analogue: shuffling, batching, merging,
 padding, per-data-parallel-rank sharding, and background prefetch (a thread
 + queue — the 'distributed input processing' of paper §6.2.1 scaled down to
 one host; the rank/world interface is what a tf.data-service-style fleet
-would implement).  Deterministic: (seed, epoch, step) -> batch, which is
-what checkpoint/restart uses to skip ahead (exactly-once sample replay).
+implements — see `repro.sampling_service`).  Deterministic:
+(seed, epoch, step) -> batch, which is what checkpoint/restart uses to skip
+ahead (exactly-once sample replay).  The index math and group merge/pad
+live in `repro.data.grouping` and are shared verbatim with the sampler
+fleet, so the in-process and service paths emit bit-identical batches.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
-import numpy as np
-
-from repro.core.graph_tensor import GraphTensor, stack_graphs
-from repro.data.batching import SizeConstraints, merge_graphs, pad_to_sizes
+from repro.core.graph_tensor import GraphTensor
+from repro.data.batching import SizeConstraints
+from repro.data.grouping import (BatchPlan, build_batch,
+                                 step_size_constraints)
 
 
 class GraphBatcher:
@@ -43,78 +46,75 @@ class GraphBatcher:
                  rank: int = 0, world: int = 1, drop_remainder: bool = True,
                  num_replicas: Optional[int] = None):
         self.graphs = list(graphs)
+        self.plan = BatchPlan(batch_size, seed=seed, rank=rank, world=world,
+                              num_replicas=num_replicas)
         self.batch_size = batch_size
         self.sizes = sizes
         self.seed = seed
         self.rank = rank
         self.world = world
-        if batch_size % world:
-            raise ValueError(f"batch_size {batch_size} not divisible by "
-                             f"world {world}")
-        self.per_rank = batch_size // world
+        self.per_rank = self.plan.per_rank
         self.num_replicas = num_replicas
-        if num_replicas is not None:
-            if num_replicas < 1:
-                raise ValueError(f"num_replicas must be >= 1, "
-                                 f"got {num_replicas}")
-            if self.per_rank % num_replicas:
-                raise ValueError(
-                    f"per-rank batch {self.per_rank} not divisible by "
-                    f"num_replicas {num_replicas}")
-        self.per_group = self.per_rank // (num_replicas or 1)
+        self.per_group = self.plan.per_group
 
     def epoch(self, epoch: int, *, start_step: int = 0
               ) -> Iterator[GraphTensor]:
         """Deterministic epoch stream; `start_step` skips ahead (restart)."""
-        rng = np.random.default_rng((self.seed, epoch))
-        order = rng.permutation(len(self.graphs))
-        n_steps = len(order) // self.batch_size
-        for step in range(start_step, n_steps):
-            lo = step * self.batch_size + self.rank * self.per_rank
-            idx = order[lo:lo + self.per_rank]
-            if self.num_replicas is None:
-                merged = merge_graphs([self.graphs[i] for i in idx])
-                yield pad_to_sizes(merged, self._rank_sizes())
-                continue
-            groups = []
-            for r in range(self.num_replicas):
-                gidx = idx[r * self.per_group:(r + 1) * self.per_group]
-                merged = merge_graphs([self.graphs[i] for i in gidx])
-                groups.append(pad_to_sizes(merged, self.sizes))
-            yield stack_graphs(groups)
-
-    def _rank_sizes(self) -> SizeConstraints:
-        if self.world == 1:
-            return self.sizes
-        return SizeConstraints(
-            total_num_components=self.per_rank + 1,
-            total_num_nodes={k: max(v // self.world, 8)
-                             for k, v in self.sizes.total_num_nodes.items()},
-            total_num_edges={k: max(v // self.world, 8)
-                             for k, v in self.sizes.total_num_edges.items()})
+        order = self.plan.order(epoch, len(self.graphs))
+        sizes = step_size_constraints(self.plan, self.sizes)
+        for step in range(start_step, self.plan.num_steps(len(self.graphs))):
+            idx = self.plan.step_indices(order, step)
+            yield build_batch([self.graphs[i] for i in idx], self.plan,
+                              sizes)
 
 
 def prefetch(it: Iterator, depth: int = 2) -> Iterator:
-    """Background-thread prefetch (host-side pipelining)."""
+    """Background-thread prefetch (host-side pipelining).
+
+    Contract (the two failure modes that used to hang/leak):
+
+    * an exception in the source iterator is re-raised in the consumer
+      (after any already-buffered items) — never a silent early end;
+    * closing the generator early (``break``/``.close()``/GC) unblocks
+      and JOINS the worker thread instead of leaking it blocked on a
+      full queue.
+    """
     q: queue.Queue = queue.Queue(maxsize=depth)
     stop = object()
+    cancel = threading.Event()
     err: list[BaseException] = []
+
+    def _put(item) -> bool:
+        """Bounded put that gives up once the consumer cancelled."""
+        while not cancel.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def worker():
         try:
             for item in it:
-                q.put(item)
-        except BaseException as e:  # noqa: BLE001
+                if not _put(item):
+                    return
+        except BaseException as e:  # noqa: BLE001 — re-raised in consumer
             err.append(e)
         finally:
-            q.put(stop)
+            _put(stop)
 
     t = threading.Thread(target=worker, daemon=True)
     t.start()
-    while True:
-        item = q.get()
-        if item is stop:
-            if err:
-                raise err[0]
-            return
-        yield item
+    try:
+        while True:
+            item = q.get()
+            if item is stop:
+                t.join()
+                if err:
+                    raise err[0]
+                return
+            yield item
+    finally:
+        cancel.set()
+        t.join(timeout=10.0)

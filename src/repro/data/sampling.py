@@ -218,18 +218,45 @@ def sample_subgraph(store: GraphStore, spec: SamplingSpec, seed: int,
         Context(np.asarray([1], np.int32), {}), node_sets, edge_sets)
 
 
+def seed_rng(base_seed: int, root: int) -> np.random.Generator:
+    """The repo-wide deterministic sampling convention: every rooted
+    subgraph is drawn from its OWN generator keyed on (base_seed, root).
+
+    This makes sampled output a pure function of the root — independent of
+    which worker/shard draws it, in what order, or how many there are —
+    which is what lets `distributed_sample` re-run a failed shard
+    idempotently and lets the async sampler fleet
+    (`repro.sampling_service`) reproduce the in-process stream exactly."""
+    return np.random.default_rng((base_seed, int(root)))
+
+
 class InMemorySampler:
-    """Medium-scale path (§6.1.2): samples on demand, nothing persisted."""
+    """Medium-scale path (§6.1.2): samples on demand, nothing persisted.
+    Per-root generators (see `seed_rng`): ``sample([a, b]) ==
+    sample([b, a])`` element-wise, and equals what `distributed_sample`
+    persists for the same roots and base seed."""
 
     def __init__(self, store: GraphStore, spec: SamplingSpec, *,
                  seed: int = 0):
         self.store = store
         self.spec = spec
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
 
     def sample(self, roots: Sequence[int]) -> list[GraphTensor]:
-        return [sample_subgraph(self.store, self.spec, int(r), self.rng)
+        return [sample_subgraph(self.store, self.spec, int(r),
+                                seed_rng(self.seed, int(r)))
                 for r in roots]
+
+
+def shard_partition(seeds: Sequence[int], num_shards: int
+                    ) -> list[np.ndarray]:
+    """The sampler's shard striping (``seeds[s::num_shards]``) — the
+    single owner of how `distributed_sample` partitions roots into shard
+    files, so consumers that need the file-order root list (e.g. to feed
+    the same roots to the sampling service) derive it from here instead
+    of re-implementing the stride."""
+    seeds = np.asarray(seeds)
+    return [seeds[shard::num_shards] for shard in range(num_shards)]
 
 
 def distributed_sample(store: GraphStore, spec: SamplingSpec,
@@ -238,15 +265,18 @@ def distributed_sample(store: GraphStore, spec: SamplingSpec,
                        writer: Callable | None = None) -> list[str]:
     """Large-scale path (§6.1.1): shard the seeds, run Algorithm 1 per
     shard, persist one file per shard (the fault-tolerance unit — a failed
-    shard is simply re-run; output write is atomic via tmp+rename)."""
+    shard is simply re-run; output write is atomic via tmp+rename).
+
+    Deterministic regardless of `num_shards`: each root draws from
+    `seed_rng(base_seed, root)`, so the union of sampled subgraphs over
+    all shards is a pure function of (seeds, base_seed) — only the
+    grouping into files depends on the shard count."""
     from repro.data.serialization import save_graphs
     os.makedirs(out_dir, exist_ok=True)
     paths = []
-    seeds = np.asarray(seeds)
-    for shard in range(num_shards):
-        shard_seeds = seeds[shard::num_shards]
-        rng = np.random.default_rng(base_seed + shard)
-        graphs = [sample_subgraph(store, spec, int(s), rng)
+    for shard, shard_seeds in enumerate(shard_partition(seeds, num_shards)):
+        graphs = [sample_subgraph(store, spec, int(s),
+                                  seed_rng(base_seed, int(s)))
                   for s in shard_seeds]
         path = os.path.join(out_dir, f"samples-{shard:05d}-of-"
                                      f"{num_shards:05d}.npz")

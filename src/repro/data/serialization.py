@@ -17,15 +17,24 @@ from repro.core.graph_tensor import (Adjacency, Context, EdgeSet,
 
 
 def graph_to_flat(g: GraphTensor, prefix: str = "") -> dict[str, np.ndarray]:
+    """Flatten a scalar OR stacked ([R, ...] super-batch) GraphTensor.
+
+    ``#capacity`` is stored explicitly: it is static aux data that cannot
+    be recovered from array shapes once a leading stack axis exists (and,
+    for a padded node set without features, not even from a scalar graph's
+    arrays).  Readers fall back to shape inference when the key is absent
+    (files written before the key existed)."""
     flat = {f"{prefix}context.#sizes": np.asarray(g.context.sizes)}
     for k, v in g.context.features.items():
         flat[f"{prefix}context.{k}"] = np.asarray(v)
     for name, ns in g.node_sets.items():
         flat[f"{prefix}nodes/{name}.#sizes"] = np.asarray(ns.sizes)
+        flat[f"{prefix}nodes/{name}.#capacity"] = np.asarray(ns.capacity)
         for k, v in ns.features.items():
             flat[f"{prefix}nodes/{name}.{k}"] = np.asarray(v)
     for name, es in g.edge_sets.items():
         flat[f"{prefix}edges/{name}.#sizes"] = np.asarray(es.sizes)
+        flat[f"{prefix}edges/{name}.#capacity"] = np.asarray(es.capacity)
         flat[f"{prefix}edges/{name}.#source"] = np.asarray(es.adjacency.source)
         flat[f"{prefix}edges/{name}.#target"] = np.asarray(es.adjacency.target)
         flat[f"{prefix}edges/{name}.#meta"] = np.asarray(
@@ -59,8 +68,10 @@ def flat_to_graph(flat: dict[str, np.ndarray], prefix: str = ""
     node_sets = {}
     for name, d in node_sets_raw.items():
         sizes = d.pop("#sizes")
-        cap = (next(iter(d.values())).shape[0] if d
-               else int(np.asarray(sizes).sum()))
+        cap = d.pop("#capacity", None)
+        if cap is None:  # legacy file: infer from (scalar) array shapes
+            cap = (next(iter(d.values())).shape[0] if d
+                   else int(np.asarray(sizes).sum()))
         node_sets[name] = NodeSet(sizes, d, int(cap))
     edge_sets = {}
     for name, d in edge_sets_raw.items():
@@ -68,9 +79,10 @@ def flat_to_graph(flat: dict[str, np.ndarray], prefix: str = ""
         src = d.pop("#source")
         tgt = d.pop("#target")
         meta = d.pop("#meta")
+        cap = d.pop("#capacity", None)
         edge_sets[name] = EdgeSet(
             sizes, Adjacency(src, tgt, str(meta[0]), str(meta[1])), d,
-            int(src.shape[0]))
+            int(cap if cap is not None else src.shape[0]))
     return GraphTensor(Context(ctx_sizes, ctx_feats), node_sets, edge_sets)
 
 

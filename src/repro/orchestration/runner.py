@@ -120,8 +120,10 @@ class RunResult:
     metrics: dict
 
 
-def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
-                                                          np.ndarray]]],
+def run(*, train_batches: Optional[Callable[[int],
+                                            Iterator[tuple[GraphTensor,
+                                                           np.ndarray]]]]
+        = None,
         model_fn: Callable[[], tuple[Module, Module]],
         task: Task,
         epochs: int = 1,
@@ -132,12 +134,27 @@ def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
         log_every: int = 20,
         seed: int = 0,
         num_devices: Optional[int] = None,
-        max_steps: Optional[int] = None) -> RunResult:
+        max_steps: Optional[int] = None,
+        sampler: str = "in_process",
+        service=None,
+        label_fn: Optional[Callable[[GraphTensor], np.ndarray]] = None,
+        double_buffer: Optional[bool] = None) -> RunResult:
     """The paper's runner.run(): wires data, model, task, trainer.
 
     model_fn() -> (init_states_module, gnn_module); both take/return
     GraphTensors (MapFeatures-style + GraphUpdate stack).
     train_batches(epoch) yields (padded GraphTensor, labels[C]).
+
+    ``sampler="service"`` swaps the data source for an async sampler
+    fleet: ``service`` is a `repro.sampling_service.SamplingService`
+    (its `epoch(e)` stream is bit-identical to the in-process
+    `GraphBatcher` on the same plan, so the loss trajectory matches),
+    ``label_fn(graph)`` extracts per-batch labels host-side, and the
+    host->device placement is double-buffered
+    (`repro.train.train_loop.device_prefetch`) so sampling, padding, wire
+    decode and `put_super_batch` all overlap the previous train step.
+    ``double_buffer`` overrides the per-sampler default (service: on,
+    in_process: off).
 
     With ``num_devices`` the runner trains data-parallel over a
     ``("data",)`` mesh: train_batches must yield stacked super-batches
@@ -150,6 +167,24 @@ def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
     the 1-device run on the same seed (component groups are weighted
     equally, so the mean-of-group-means is the global mean).
     """
+    if sampler == "service":
+        if service is None or label_fn is None:
+            raise ValueError("sampler='service' needs service= (a "
+                             "SamplingService) and label_fn=")
+
+        def batches_fn(epoch):
+            for graph in service.epoch(epoch):
+                yield graph, label_fn(graph)
+    elif sampler == "in_process":
+        if train_batches is None:
+            raise ValueError("sampler='in_process' needs train_batches=")
+        batches_fn = train_batches
+    else:
+        raise ValueError(f"unknown sampler {sampler!r} "
+                         "(want 'in_process' or 'service')")
+    if double_buffer is None:
+        double_buffer = sampler == "service"
+
     init_states, gnn = model_fn()
     head = task.head()
     key = jax.random.PRNGKey(seed)
@@ -208,10 +243,15 @@ def run(*, train_batches: Callable[[int], Iterator[tuple[GraphTensor,
     for epoch in range(epochs):
         if max_steps is not None and step >= max_steps:
             break
-        for graph, labels in train_batches(epoch):
+        if double_buffer:
+            from repro.train.train_loop import device_prefetch
+            placed = device_prefetch(batches_fn(epoch), place)
+        else:
+            placed = (place(g, l) for g, l in batches_fn(epoch))
+        for graph, labels in placed:
             if max_steps is not None and step >= max_steps:
+                placed.close()  # joins the device_prefetch thread
                 break
-            graph, labels = place(graph, labels)
             if mesh is not None:
                 if dp_train_step is None:
                     from repro.core.graph_tensor import stack_size

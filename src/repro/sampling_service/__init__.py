@@ -1,0 +1,9 @@
+"""Async graph sampling service: a sampler fleet streaming padded
+super-batches to the training mesh (paper §6.1.1's sampling-as-a-service,
+scaled to one host's process fleet; README.md has the wire format and the
+ownership/backpressure contract)."""
+from repro.sampling_service.client import StreamClient  # noqa: F401
+from repro.sampling_service.coordinator import (Coordinator,  # noqa: F401
+                                                DeadFleetError, WorkerHandle)
+from repro.sampling_service.service import SamplingService  # noqa: F401
+from repro.sampling_service.worker import SamplerWorker  # noqa: F401

@@ -1,0 +1,135 @@
+"""SamplingService — spawn a sampler fleet and stream super-batches.
+
+The user-facing handle that ties the pieces together: it derives the
+shared `BatchPlan`, forks `num_workers` `SamplerWorker` processes (each
+with a copy-on-write replica of the read-only `GraphStore` and one
+socketpair to the trainer), and exposes the `GraphBatcher`-shaped
+iterator through a `StreamClient` + `Coordinator`.
+
+    service = SamplingService(store, spec, seeds, batch_size=16,
+                              sizes=sizes, num_workers=2, num_replicas=8)
+    for super_batch in service.epoch(0):
+        ...                       # bit-identical to GraphBatcher's stream
+    service.close()
+
+Backends: ``"process"`` (default; `fork` multiprocessing — samplers never
+import jax, so forking a jax-initialized trainer is safe) or ``"thread"``
+(same protocol over the same sockets, for platforms without fork — no
+parallel speedup, but identical semantics and wire path).
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+import warnings
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph_tensor import GraphTensor
+from repro.data.batching import SizeConstraints
+from repro.data.grouping import BatchPlan
+from repro.data.sampling import GraphStore, SamplingSpec
+from repro.sampling_service import wire
+from repro.sampling_service.client import StreamClient
+from repro.sampling_service.coordinator import Coordinator, WorkerHandle
+from repro.sampling_service.worker import worker_main
+
+
+class SamplingService:
+    def __init__(self, store: GraphStore, spec: SamplingSpec,
+                 seeds: Sequence[int], *, batch_size: int,
+                 sizes: SizeConstraints, num_workers: int = 2,
+                 num_replicas: Optional[int] = None, seed: int = 0,
+                 rank: int = 0, world: int = 1, base_seed: int = 0,
+                 backend: str = "process"):
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+        self.plan = BatchPlan(batch_size, seed=seed, rank=rank, world=world,
+                              num_replicas=num_replicas)
+        self.seeds = np.asarray(seeds)
+        self.sizes = sizes
+        if backend == "process" and "fork" not in mp.get_all_start_methods():
+            backend = "thread"  # no fork (e.g. some non-POSIX hosts)
+        self.backend = backend
+        handles = []
+        for wid in range(num_workers):
+            trainer_sock, worker_sock = wire.socket_pair()
+            args = (wid, worker_sock, store, spec, self.seeds, self.plan,
+                    sizes, base_seed)
+            if backend == "process":
+                proc = mp.get_context("fork").Process(
+                    target=worker_main, args=args, daemon=True,
+                    name=f"sampler-worker-{wid}")
+                with warnings.catch_warnings():
+                    # jax warns that fork()+multithreading can deadlock —
+                    # if the child calls back into jax.  Sampler workers
+                    # are numpy+sockets only by contract (see worker.py),
+                    # which is what makes the CoW-GraphStore fork safe.
+                    warnings.filterwarnings(
+                        "ignore", message=".*os.fork\\(\\) is incompatible "
+                                          "with multithreaded.*")
+                    proc.start()
+                worker_sock.close()  # child owns its end now
+            elif backend == "thread":
+                proc = threading.Thread(target=worker_main, args=args,
+                                        daemon=True,
+                                        name=f"sampler-worker-{wid}")
+                proc.start()
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+            handles.append(WorkerHandle(wid, trainer_sock, process=proc))
+        self.coordinator = Coordinator(handles)
+        self.client = StreamClient(self.coordinator, self.plan,
+                                   len(self.seeds))
+        self._closed = False
+
+    # -- the GraphBatcher contract -------------------------------------------
+
+    @property
+    def num_steps(self) -> int:
+        return self.client.num_steps
+
+    def epoch(self, epoch: int, *, start_step: int = 0
+              ) -> Iterator[GraphTensor]:
+        return self.client.epoch(epoch, start_step=start_step)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def watermarks(self):
+        return self.coordinator.watermarks()
+
+    def kill_worker(self, worker_id: int) -> None:
+        """Hard-kill one worker (test/chaos hook for the rebalance path)."""
+        w = self.coordinator.workers[worker_id]
+        if w.process is not None and hasattr(w.process, "kill"):
+            w.process.kill()
+
+    def close(self, timeout: float = 5.0) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.coordinator.stop_all()
+        # closing the trainer ends unblocks any worker mid-sendall (EPIPE)
+        for w in self.coordinator.workers.values():
+            w.close()
+        for w in self.coordinator.workers.values():
+            p = w.process
+            if p is None:
+                continue
+            p.join(timeout)
+            if hasattr(p, "terminate") and p.is_alive():
+                p.terminate()
+                p.join(timeout)
+
+    def __enter__(self) -> "SamplingService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort: never leak a fleet
+        try:
+            self.close(timeout=0.5)
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass

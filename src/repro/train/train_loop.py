@@ -192,6 +192,23 @@ def make_train_step(model, cfg: ArchConfig, optimizer, *,
     return jax.jit(dp_step, donate_argnums=(0, 1))
 
 
+def device_prefetch(batches, place: Callable, *, depth: int = 2):
+    """Double-buffered host->device transfer.
+
+    Wraps a host batch iterator so that ``place`` (device_put / sharded
+    placement) for batch N+1 runs on a background thread while the caller
+    is still dispatching step N — jax transfers are asynchronous, so the
+    host->device copy (and, with the sampling service, the wire decode
+    feeding it) overlaps the previous train step instead of serializing
+    with it.  ``depth`` bounds the in-flight batches (device memory bound);
+    2 = classic double buffering.  Exceptions in `batches`/`place` re-raise
+    at the consumer and early close joins the thread (repro.data.pipeline
+    prefetch semantics).
+    """
+    from repro.data.pipeline import prefetch
+    return prefetch((place(*b) for b in batches), depth=depth)
+
+
 def make_eval_step(model, cfg: ArchConfig) -> Callable:
     loss_fn = make_loss_fn(model, cfg)
 

@@ -1,0 +1,351 @@
+"""Async sampling service: wire framing, stream parity with the
+in-process GraphBatcher, determinism across fleet sizes, rebalance on
+worker loss, prefetch semantics, and the runner's service path."""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.schema import mag_schema
+from repro.data import (GraphBatcher, InMemorySampler, SamplingSpecBuilder,
+                        find_size_constraints)
+from repro.data.grouping import BatchPlan, build_batch
+from repro.data.pipeline import prefetch
+from repro.data.synthetic import synthetic_mag
+from repro.sampling_service import SamplingService, wire
+
+
+def _leaves(g):
+    import jax
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(g)]
+
+
+def assert_graphs_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    store, _ = synthetic_mag(n_papers=240, n_authors=100, n_institutions=8,
+                             n_fields=24, n_classes=8, feat_dim=32)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    cited = seed_op.sample(8, "cites")
+    cited.join([seed_op]).sample(4, "written")
+    spec = seed_op.build()
+    roots = list(range(64))
+    graphs = InMemorySampler(store, spec, seed=0).sample(roots)
+    sizes = find_size_constraints(graphs, 8)
+    return store, spec, roots, graphs, sizes
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def test_wire_roundtrip_control_and_batch(problem):
+    store, spec, roots, graphs, sizes = problem
+    plan = BatchPlan(8, seed=0, num_replicas=2)
+    batch = build_batch(graphs[:8], plan, sizes)
+    a, b = wire.socket_pair()
+    try:
+        wire.send_frame(a, wire.ASSIGN, {"epoch": 3, "steps": [1, 2]})
+        wire.send_frame(a, wire.BATCH, {"worker": 0, "epoch": 3, "step": 1},
+                        batch)
+        kind, meta, g = wire.recv_frame(b)
+        assert (kind, meta) == (wire.ASSIGN, {"epoch": 3, "steps": [1, 2]})
+        assert g is None
+        kind, meta, g = wire.recv_frame(b)
+        assert kind == wire.BATCH and meta["step"] == 1
+        assert_graphs_equal(g, batch)  # incl. [R, ...] stacked leaves
+        assert g.node_sets["paper"].capacity == batch.node_sets[
+            "paper"].capacity  # static aux survives the wire
+    finally:
+        a.close()
+        b.close()
+
+
+def test_wire_bad_magic_and_eof():
+    a, b = wire.socket_pair()
+    try:
+        a.sendall(b"XXXX")
+        with pytest.raises(wire.WireError):
+            wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    a, b = wire.socket_pair()
+    try:
+        a.close()  # clean close before any frame
+        with pytest.raises(EOFError):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+    a, b = wire.socket_pair()
+    try:
+        a.sendall(wire.MAGIC + b"\x00\x00")  # truncated mid-frame
+        a.close()
+        with pytest.raises(wire.WireError):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_wire_timeout_preserves_stream(problem):
+    store, spec, roots, graphs, sizes = problem
+    plan = BatchPlan(8, seed=0, num_replicas=1)
+    batch = build_batch(graphs[:8], plan, sizes)
+    a, b = wire.socket_pair()
+    try:
+        with pytest.raises(socket.timeout):
+            wire.recv_frame(b, timeout=0.05)
+        wire.send_frame(a, wire.BATCH, {"worker": 0, "epoch": 0, "step": 0},
+                        batch)
+        kind, meta, g = wire.recv_frame(b, timeout=1.0)
+        assert kind == wire.BATCH
+        assert_graphs_equal(g, batch)
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# stream contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_workers", [1, 2, 3])
+def test_stream_matches_in_process_batcher(problem, num_workers):
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 16, sizes, seed=0, num_replicas=2)
+    with SamplingService(store, spec, roots, batch_size=16, sizes=sizes,
+                         num_workers=num_workers, num_replicas=2,
+                         seed=0, base_seed=0) as svc:
+        for epoch in (0, 1):
+            got = list(svc.epoch(epoch))
+            want = list(batcher.epoch(epoch))
+            assert len(got) == len(want) == svc.num_steps
+            for g, w in zip(got, want):
+                assert_graphs_equal(g, w)
+
+
+def test_stream_start_step_skip(problem):
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 16, sizes, seed=0, num_replicas=2)
+    with SamplingService(store, spec, roots, batch_size=16, sizes=sizes,
+                         num_workers=2, num_replicas=2, seed=0) as svc:
+        got = list(svc.epoch(0, start_step=2))
+        want = list(batcher.epoch(0, start_step=2))
+        assert len(got) == len(want) == svc.num_steps - 2
+        for g, w in zip(got, want):
+            assert_graphs_equal(g, w)
+
+
+def test_stream_matches_batcher_with_world_sharding(problem):
+    """Legacy contract (num_replicas=None) at world > 1: the service must
+    pad to the same 1/world rank constraints GraphBatcher uses — the
+    multi-host seam the ROADMAP items plug into."""
+    store, spec, roots, graphs, sizes = problem
+    # legacy mode takes the GLOBAL batch constraint and pads each rank to
+    # its 1/world share, so derive sizes for the full batch of 16
+    sizes16 = find_size_constraints(graphs, 16)
+    for rank in (0, 1):
+        batcher = GraphBatcher(graphs, 16, sizes16, seed=0, rank=rank,
+                               world=2)
+        with SamplingService(store, spec, roots, batch_size=16,
+                             sizes=sizes16, num_workers=2, seed=0,
+                             rank=rank, world=2) as svc:
+            got = list(svc.epoch(0))
+            want = list(batcher.epoch(0))
+            assert len(got) == len(want) == svc.num_steps
+            for g, w in zip(got, want):
+                assert_graphs_equal(g, w)
+
+
+def test_thread_backend_parity(problem):
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 16, sizes, seed=0, num_replicas=2)
+    with SamplingService(store, spec, roots, batch_size=16, sizes=sizes,
+                         num_workers=2, num_replicas=2, seed=0,
+                         backend="thread") as svc:
+        for g, w in zip(svc.epoch(0), batcher.epoch(0)):
+            assert_graphs_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_rebalance_on_worker_killed_before_epoch(problem):
+    """A worker that dies before producing anything: every one of its
+    steps must be re-executed by the survivor, stream unchanged."""
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 8, sizes, seed=0, num_replicas=1)
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=2, num_replicas=1, seed=0) as svc:
+        svc.kill_worker(1)
+        svc.coordinator.workers[1].process.join(5.0)
+        got = list(svc.epoch(0))
+        want = list(batcher.epoch(0))
+        assert len(got) == len(want) == svc.num_steps
+        for g, w in zip(got, want):
+            assert_graphs_equal(g, w)
+        assert not svc.coordinator.workers[1].alive
+
+
+def test_rebalance_on_worker_killed_mid_epoch(problem):
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 8, sizes, seed=0, num_replicas=1)
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=2, num_replicas=1, seed=0) as svc:
+        got = []
+        for i, g in enumerate(svc.epoch(0)):
+            got.append(g)
+            if i == 1:
+                svc.kill_worker(0)
+        want = list(batcher.epoch(0))
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            assert_graphs_equal(g, w)
+
+
+def test_dead_fleet_raises(problem):
+    from repro.sampling_service import DeadFleetError
+    store, spec, roots, graphs, sizes = problem
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=1, num_replicas=1, seed=0) as svc:
+        svc.kill_worker(0)
+        svc.coordinator.workers[0].process.join(5.0)
+        with pytest.raises(DeadFleetError):
+            list(svc.epoch(0))
+
+
+def test_watermarks_track_progress(problem):
+    store, spec, roots, graphs, sizes = problem
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=2, num_replicas=1, seed=0) as svc:
+        list(svc.epoch(0))
+        marks = svc.watermarks()
+        assert set(marks) == {0, 1}
+        assert all(m is not None and m[0] == 0 for m in marks.values())
+
+
+# ---------------------------------------------------------------------------
+# prefetch (satellite: exception propagation + early-close join)
+# ---------------------------------------------------------------------------
+
+def test_prefetch_reraises_source_exception():
+    def boom():
+        yield 1
+        yield 2
+        raise RuntimeError("sampler exploded")
+
+    it = prefetch(boom(), depth=1)
+    assert next(it) == 1
+    assert next(it) == 2
+    with pytest.raises(RuntimeError, match="sampler exploded"):
+        next(it)
+
+
+def test_prefetch_reraises_even_when_queue_was_full():
+    def boom():
+        yield from range(5)
+        raise ValueError("late failure behind a full queue")
+
+    got = []
+    with pytest.raises(ValueError, match="late failure"):
+        for x in prefetch(iter(boom()), depth=2):
+            got.append(x)
+            time.sleep(0.01)  # let the producer run ahead and fill up
+    assert got == list(range(5))
+
+
+def test_prefetch_early_close_joins_thread():
+    n_before = threading.active_count()
+
+    def slow_source():
+        for i in range(1000):
+            yield i
+
+    it = prefetch(slow_source(), depth=1)
+    assert next(it) == 0
+    it.close()  # must unblock the producer stuck on the full queue + join
+    deadline = time.time() + 5.0
+    while threading.active_count() > n_before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= n_before
+
+
+def test_prefetch_order_preserved():
+    assert list(prefetch(iter(range(100)), depth=3)) == list(range(100))
+
+
+# ---------------------------------------------------------------------------
+# runner integration
+# ---------------------------------------------------------------------------
+
+def test_runner_service_path_matches_in_process_loss(problem):
+    """runner.run(sampler='service') reaches the in-process loss exactly
+    (bit-identical batches => identical float trajectory)."""
+    import jax
+    from repro.core import HIDDEN_STATE
+    from repro.core.models import vanilla_mpnn
+    from repro.nn.layers import Linear
+    from repro.nn.module import Module
+    from repro.orchestration import RootNodeMulticlassClassification, run
+
+    store, spec, roots, graphs, sizes = problem
+    dim = 16
+
+    class Init(Module):
+        def __init__(self):
+            self.paper = Linear(32, dim)
+
+        def init(self, key):
+            return {"paper": self.paper.init(key)}
+
+        def __call__(self, params, graph):
+            return graph.replace_features(node_sets={
+                "paper": {HIDDEN_STATE: jax.nn.relu(self.paper(
+                    params["paper"], graph.node_sets["paper"]["feat"]))}})
+
+    gnn = vanilla_mpnn({"cites": ("paper", "paper")}, {"paper": dim},
+                       message_dim=dim, hidden_dim=dim, num_rounds=2)
+    task = RootNodeMulticlassClassification("paper", 8, dim)
+
+    def labels_fn(graph):
+        arr = np.asarray(graph.node_sets["paper"].sizes)
+        lab = np.asarray(graph.node_sets["paper"]["labels"])
+        return np.stack([task.root_labels(arr[r], lab[r])
+                         for r in range(arr.shape[0])]).astype(np.int32)
+
+    def train_batches(epoch):
+        batcher = GraphBatcher(graphs, 8, sizes, seed=0, num_replicas=1)
+        for g in batcher.epoch(epoch):
+            yield g, labels_fn(g)
+
+    kwargs = dict(model_fn=lambda: (Init(), gnn), task=task, epochs=1,
+                  learning_rate=1e-3, total_steps=10, log_every=10 ** 9,
+                  max_steps=3, num_devices=1)
+    res_inproc = run(train_batches=train_batches, **kwargs)
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=2, num_replicas=1, seed=0) as svc:
+        res_service = run(sampler="service", service=svc,
+                          label_fn=labels_fn, **kwargs)
+    assert res_inproc.step == res_service.step == 3
+    assert res_inproc.train_loss == res_service.train_loss
+
+
+def test_runner_service_path_validates_args(problem):
+    from repro.orchestration import run
+
+    with pytest.raises(ValueError, match="service"):
+        run(sampler="service", model_fn=None, task=None)
+    with pytest.raises(ValueError, match="train_batches"):
+        run(sampler="in_process", model_fn=None, task=None)
+    with pytest.raises(ValueError, match="unknown sampler"):
+        run(sampler="bogus", model_fn=None, task=None)

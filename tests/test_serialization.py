@@ -1,0 +1,173 @@
+"""Serialization round-trips for the shapes the sampling service ships
+constantly: heterogeneous graphs with EMPTY edge sets, zero-size padding
+components, padded featureless node sets, and stacked super-batches."""
+import numpy as np
+import pytest
+
+from repro.core.graph_tensor import (Adjacency, Context, EdgeSet,
+                                     GraphTensor, NodeSet, stack_graphs,
+                                     stack_size)
+from repro.core.schema import mag_schema
+from repro.data import (InMemorySampler, SamplingSpecBuilder,
+                        find_size_constraints, load_graphs, merge_graphs,
+                        pad_to_sizes, save_graphs)
+from repro.data.batching import SizeConstraints
+from repro.data.serialization import flat_to_graph, graph_to_flat
+from repro.data.synthetic import synthetic_mag
+from repro.sampling_service import wire
+
+
+def hetero_graph_with_empty_edges() -> GraphTensor:
+    """Two node sets; 'follows' has real edges, 'likes' is EMPTY (capacity
+    1, zero valid — the sampler emits this whenever a frontier found no
+    neighbors); 'item' carries NO features (capacity must survive)."""
+    return GraphTensor(
+        Context(np.asarray([1], np.int32), {"w": np.asarray([2.5],
+                                                            np.float32)}),
+        {"user": NodeSet(np.asarray([3], np.int32),
+                         {"h": np.arange(12, dtype=np.float32).reshape(3, 4)},
+                         3),
+         "item": NodeSet(np.asarray([2], np.int32), {}, 2)},
+        {"follows": EdgeSet(np.asarray([2], np.int32),
+                            Adjacency(np.asarray([0, 1], np.int32),
+                                      np.asarray([1, 2], np.int32),
+                                      "user", "user"),
+                            {"t": np.asarray([0.5, 1.5], np.float32)}, 2),
+         "likes": EdgeSet(np.asarray([0], np.int32),
+                          Adjacency(np.zeros(1, np.int32),
+                                    np.zeros(1, np.int32), "user", "item"),
+                          {}, 1)})
+
+
+def assert_roundtrip(g: GraphTensor, g2: GraphTensor):
+    assert set(g2.node_sets) == set(g.node_sets)
+    assert set(g2.edge_sets) == set(g.edge_sets)
+    np.testing.assert_array_equal(np.asarray(g2.context.sizes),
+                                  np.asarray(g.context.sizes))
+    for k, v in g.context.features.items():
+        np.testing.assert_array_equal(np.asarray(g2.context[k]),
+                                      np.asarray(v))
+    for name, ns in g.node_sets.items():
+        ns2 = g2.node_sets[name]
+        assert ns2.capacity == ns.capacity, name
+        np.testing.assert_array_equal(np.asarray(ns2.sizes),
+                                      np.asarray(ns.sizes))
+        assert set(ns2.features) == set(ns.features)
+        for k, v in ns.features.items():
+            np.testing.assert_array_equal(np.asarray(ns2[k]), np.asarray(v))
+    for name, es in g.edge_sets.items():
+        es2 = g2.edge_sets[name]
+        assert es2.capacity == es.capacity, name
+        assert es2.adjacency.source_name == es.adjacency.source_name
+        assert es2.adjacency.target_name == es.adjacency.target_name
+        np.testing.assert_array_equal(np.asarray(es2.sizes),
+                                      np.asarray(es.sizes))
+        np.testing.assert_array_equal(np.asarray(es2.adjacency.source),
+                                      np.asarray(es.adjacency.source))
+        np.testing.assert_array_equal(np.asarray(es2.adjacency.target),
+                                      np.asarray(es.adjacency.target))
+        for k, v in es.features.items():
+            np.testing.assert_array_equal(np.asarray(es2[k]), np.asarray(v))
+
+
+def roundtrip_flat(g):
+    return flat_to_graph({k: np.asarray(v)
+                          for k, v in graph_to_flat(g).items()})
+
+
+def roundtrip_wire(g):
+    return wire.decode_payload(wire.pack_arrays(graph_to_flat(g)))
+
+
+@pytest.mark.parametrize("roundtrip", [roundtrip_flat, roundtrip_wire],
+                         ids=["flat", "wire"])
+def test_hetero_empty_edge_sets_roundtrip(roundtrip):
+    g = hetero_graph_with_empty_edges()
+    assert_roundtrip(g, roundtrip(g))
+
+
+@pytest.mark.parametrize("roundtrip", [roundtrip_flat, roundtrip_wire],
+                         ids=["flat", "wire"])
+def test_padded_graph_with_zero_size_components_roundtrip(roundtrip):
+    """Merge + pad to capacities well beyond the real data: trailing
+    zero-size padding components, a fully-padded featureless node set, and
+    an edge set with zero valid edges must all survive byte-exactly."""
+    g = hetero_graph_with_empty_edges()
+    merged = merge_graphs([g, g])
+    sizes = SizeConstraints(
+        total_num_components=6,       # 2 real + 4 zero-size padding
+        total_num_nodes={"user": 16, "item": 9},
+        total_num_edges={"follows": 12, "likes": 7})
+    padded = pad_to_sizes(merged, sizes)
+    assert int(np.asarray(padded.context.sizes).sum()) == 2
+    assert padded.node_sets["item"].capacity == 9      # featureless set
+    likes_sizes = np.asarray(padded.edge_sets["likes"].sizes)
+    assert int(likes_sizes[:2].sum()) == 0   # zero REAL edges...
+    assert int(likes_sizes[-1]) == 7         # ...all 7 in the pad component
+    assert_roundtrip(padded, roundtrip(padded))
+
+
+@pytest.mark.parametrize("roundtrip", [roundtrip_flat, roundtrip_wire],
+                         ids=["flat", "wire"])
+def test_stacked_super_batch_roundtrip(roundtrip):
+    """The [R, ...] stacked super-batch — what the service actually ships:
+    per-group static capacity must come back from #capacity, not be
+    mistaken for the stack axis."""
+    g = hetero_graph_with_empty_edges()
+    sizes = SizeConstraints(total_num_components=3,
+                            total_num_nodes={"user": 8, "item": 4},
+                            total_num_edges={"follows": 8, "likes": 4})
+    stacked = stack_graphs([pad_to_sizes(merge_graphs([g]), sizes),
+                            pad_to_sizes(merge_graphs([g]), sizes)])
+    assert stack_size(stacked) == 2
+    out = roundtrip(stacked)
+    assert stack_size(out) == 2
+    assert out.node_sets["user"].capacity == 8
+    assert out.edge_sets["likes"].capacity == 4
+    assert_roundtrip(stacked, out)
+
+
+def test_save_load_graphs_file_roundtrip(tmp_path):
+    g = hetero_graph_with_empty_edges()
+    sizes = SizeConstraints(total_num_components=4,
+                            total_num_nodes={"user": 10, "item": 5},
+                            total_num_edges={"follows": 9, "likes": 3})
+    padded = pad_to_sizes(merge_graphs([g]), sizes)
+    path = str(tmp_path / "shard.npz")
+    save_graphs([g, padded], path)
+    out = load_graphs(path)
+    assert len(out) == 2
+    assert_roundtrip(g, out[0])
+    assert_roundtrip(padded, out[1])
+
+
+def test_legacy_flat_dict_without_capacity_still_loads():
+    """Files written before #capacity existed must still load (capacity
+    re-inferred from scalar array shapes)."""
+    g = hetero_graph_with_empty_edges()
+    flat = {k: np.asarray(v) for k, v in graph_to_flat(g).items()
+            if not k.endswith("#capacity")}
+    out = flat_to_graph(flat)
+    assert out.node_sets["user"].capacity == 3
+    assert out.edge_sets["follows"].capacity == 2
+    np.testing.assert_array_equal(
+        np.asarray(out.node_sets["user"]["h"]),
+        np.asarray(g.node_sets["user"]["h"]))
+
+
+def test_sampled_mag_graphs_roundtrip_via_wire():
+    """End-to-end: real sampler output (incl. possibly-empty schema edge
+    sets) through the wire codec."""
+    store, _ = synthetic_mag(n_papers=120, n_authors=50, n_institutions=6,
+                             n_fields=12)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    cited = seed_op.sample(4, "cites")
+    cited.join([seed_op]).sample(3, "written")
+    spec = seed_op.build()
+    graphs = InMemorySampler(store, spec, seed=0).sample(range(8))
+    sizes = find_size_constraints(graphs, 4)
+    padded = pad_to_sizes(merge_graphs(graphs[:4]), sizes)
+    assert_roundtrip(padded, roundtrip_wire(padded))
+    for g in graphs[:3]:
+        assert_roundtrip(g, roundtrip_wire(g))
