@@ -30,6 +30,9 @@ smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
 	    --papers 320
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
+	    --model-parallel 2 --papers 320
 	$(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 1 \
 	    --papers 320
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
@@ -39,6 +42,7 @@ smoke:
 bench:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch
 	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
+	$(PYTHON) -m benchmarks.run --quick --only mp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only sampler_service
 
 check-bench:
@@ -52,6 +56,7 @@ check-bench:
 	    --fresh results \
 	    --require BENCH_sampler_service.json \
 	    --require BENCH_dp_scaling.json \
+	    --require BENCH_mp_scaling.json \
 	    --require BENCH_segment_pool_dispatch.json
 
 bench-dispatch:

@@ -17,6 +17,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         mesh: one fixed super-batch program at mesh sizes
                         1..8 (host-forced CPU devices), written to
                         results/BENCH_dp_scaling.json
+  mp_scaling_*        — 2-D (data, model) partitioning: ZeRO-1
+                        optimizer-state bytes/device + step time at
+                        data x model in {1x1, 2x1, 2x2, 4x2}, written to
+                        results/BENCH_mp_scaling.json (gated on the
+                        memory shrink)
   arch_*              — per-arch roofline-derived step times (from dry-run)
 """
 from __future__ import annotations
@@ -368,55 +373,33 @@ def bench_dispatch(quick: bool):
     }, indent=1))
 
 
-def bench_dp_scaling(quick: bool):
-    """Data-parallel GraphTensor training over a ("data",) mesh (§7).
-
-    Weak scaling — the regime where the paper (and Serafini & Guan 2021)
-    claim sampled-minibatch data parallelism scales linearly: the
-    PER-DEVICE batch is fixed (one padded component group of `per_group`
-    sampled synthetic-MAG subgraphs per device) and the global batch grows
-    with the mesh, exactly how a practitioner adds devices.  Each point
-    runs the full shard_map train step (forward, backward, cross-replica
-    grad psum, AdamW on donated replicated state) for a chain of
-    asynchronously dispatched steps — steady-state training throughput,
-    not per-step round-trip latency.  Model: single-relation
-    (author-writes-paper) MPNN on sampled subgraphs, the table1-quick
-    configuration.  Mesh sizes interleave over several repeat rounds and
-    each point keeps its best time (this box is noisy); on a
-    host-forced-CPU mesh the ceiling is physical cores, not devices."""
+def _mag_step_workload(*, per_group, dim, rounds, emb, n_papers,
+                       n_institutions, n_fields, n_graphs):
+    """Shared scaling-bench workload (dp_scaling + mp_scaling): a
+    single-relation (author-writes-paper) MPNN training step over sampled
+    synthetic-MAG subgraphs — the table1-quick configuration.  Returns
+    (graphs, params0, loss_fn, labels_for)."""
     import jax
     import jax.numpy as jnp
     from repro.core import HIDDEN_STATE, mag_schema
     from repro.core.models import vanilla_mpnn
-    from repro.data import (GraphBatcher, InMemorySampler,
-                            SamplingSpecBuilder, find_size_constraints)
+    from repro.data import InMemorySampler, SamplingSpecBuilder
     from repro.data.synthetic import synthetic_mag
-    from repro.distributed import graph_sharding as gsh
     from repro.nn.layers import Embedding, Linear
     from repro.nn.module import Module, split_params
     from repro.orchestration import RootNodeMulticlassClassification
-    from repro.train.optimizer import AdamW
 
-    if len(jax.devices()) < 8:
-        emit("dp_scaling_skipped", 0.0,
-             f"need 8 devices, have {len(jax.devices())} (run under "
-             "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-        return
-
-    per_group, dim, rounds, emb = 16, 64, 4, 512
-    max_dev = 8
     schema = mag_schema()
-    store, _ = synthetic_mag(n_papers=800, n_authors=400,
-                             n_institutions=30, n_fields=60,
-                             n_classes=8, feat_dim=32)
+    store, _ = synthetic_mag(n_papers=n_papers, n_authors=n_papers // 2,
+                             n_institutions=n_institutions,
+                             n_fields=n_fields, n_classes=8, feat_dim=32)
     b = SamplingSpecBuilder(schema)
     seed_op = b.seed("paper")
     cited = seed_op.sample(8, "cites")
     authors = cited.join([seed_op]).sample(4, "written")
     authors.sample(4, "writes")
     spec = seed_op.build()
-    graphs = InMemorySampler(store, spec, seed=0).sample(
-        range(max_dev * per_group))
+    graphs = InMemorySampler(store, spec, seed=0).sample(range(n_graphs))
 
     class Init(Module):
         def __init__(self):
@@ -447,8 +430,6 @@ def bench_dp_scaling(quick: bool):
     params0 = {"init": split_params(init_states.init(k1))[0],
                "gnn": split_params(gnn.init(k2))[0],
                "head": split_params(head.init(k3))[0]}
-    opt = AdamW(learning_rate=1e-3)
-    opt_state0 = opt.init(params0)
 
     def loss_fn(p, graph, labels):
         g = init_states(p["init"], graph)
@@ -463,6 +444,45 @@ def bench_dp_scaling(quick: bool):
         return np.stack([
             RootNodeMulticlassClassification.root_labels(arr[r], lab[r])
             for r in range(arr.shape[0])]).astype(np.int32)
+
+    return graphs, params0, loss_fn, labels_for
+
+
+def bench_dp_scaling(quick: bool):
+    """Data-parallel GraphTensor training over a ("data",) mesh (§7).
+
+    Weak scaling — the regime where the paper (and Serafini & Guan 2021)
+    claim sampled-minibatch data parallelism scales linearly: the
+    PER-DEVICE batch is fixed (one padded component group of `per_group`
+    sampled synthetic-MAG subgraphs per device) and the global batch grows
+    with the mesh, exactly how a practitioner adds devices.  Each point
+    runs the full shard_map train step (forward, backward, cross-replica
+    grad psum, AdamW on donated replicated state) for a chain of
+    asynchronously dispatched steps — steady-state training throughput,
+    not per-step round-trip latency.  Model: single-relation
+    (author-writes-paper) MPNN on sampled subgraphs, the table1-quick
+    configuration.  Mesh sizes interleave over several repeat rounds and
+    each point keeps its best time (this box is noisy); on a
+    host-forced-CPU mesh the ceiling is physical cores, not devices."""
+    import jax
+    from repro.data import GraphBatcher, find_size_constraints
+    from repro.distributed import graph_sharding as gsh
+    from repro.train.optimizer import AdamW
+
+    if len(jax.devices()) < 8:
+        emit("dp_scaling_skipped", 0.0,
+             f"need 8 devices, have {len(jax.devices())} (run under "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+
+    per_group, dim, rounds, emb = 16, 64, 4, 512
+    max_dev = 8
+    graphs, params0, loss_fn, labels_for = _mag_step_workload(
+        per_group=per_group, dim=dim, rounds=rounds, emb=emb,
+        n_papers=800, n_institutions=30, n_fields=60,
+        n_graphs=max_dev * per_group)
+    opt = AdamW(learning_rate=1e-3)
+    opt_state0 = opt.init(params0)
 
     sizes = find_size_constraints(graphs, per_group)
     host_np = np.asarray  # copy params per config (steps donate buffers)
@@ -535,6 +555,125 @@ def bench_dp_scaling(quick: bool):
                 "8 mesh devices (2-core box ceiling ~2x; >=4 cores shows "
                 "the full curve)",
         "gates": {"speedup_8dev_vs_1dev": {"min": 1.3}},
+    }, indent=1))
+
+
+def bench_mp_scaling(quick: bool):
+    """2-D (data, model) partitioning (repro.distributed.partition).
+
+    The gated claim is the ZeRO-1 memory story: per-device optimizer-state
+    bytes shrink by the data-parallel factor (AdamW m/v sharded over
+    "data"; the gate requires >= 1.8x from data=1 to data=4).  Step time
+    is recorded per mesh shape (data x model in {1x1, 2x1, 2x2, 4x2}) for
+    the perf trajectory — on host-forced CPU devices the model-parallel
+    all-gathers are pure overhead (the win is VMEM/HBM, not CPU time), so
+    step time carries no gate.  Same training-step workload family as
+    dp_scaling: a fixed 4-group super-batch of sampled synthetic-MAG
+    subgraphs, one padded component group per data shard."""
+    import jax
+    from repro.data import GraphBatcher, find_size_constraints
+    from repro.distributed import partition
+    from repro.train.optimizer import AdamW
+
+    if len(jax.devices()) < 8:
+        emit("mp_scaling_skipped", 0.0,
+             f"need 8 devices, have {len(jax.devices())} (run under "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+
+    per_group, dim, rounds, emb = 8, 64, 2, 4096
+    shapes = [(1, 1), (2, 1), (2, 2), (4, 2)]  # (data, model)
+    max_rep = max(d for d, _ in shapes)
+    graphs, params0, loss_fn, labels_for = _mag_step_workload(
+        per_group=per_group, dim=dim, rounds=rounds, emb=emb,
+        n_papers=400, n_institutions=20, n_fields=40,
+        n_graphs=max_rep * per_group)
+    opt = AdamW(learning_rate=1e-3)
+
+    host_np = np.asarray  # copy params per config (steps donate buffers)
+
+    def make_point(data, model):
+        ndev = data * model
+        plan = partition.make_plan(ndev, model_parallel=model)
+        bs = data * per_group
+        sizes = find_size_constraints(graphs[:bs], per_group)
+        batcher = GraphBatcher(graphs[:bs], bs, sizes, seed=0,
+                               num_replicas=data)
+        sb = next(iter(batcher.epoch(0)))
+        g_dev, l_dev = plan.put_super_batch(sb, labels_for(sb))
+        state0 = opt.init(jax.tree_util.tree_map(host_np, params0))
+        state_placed = plan.place_opt_state(opt, params0, state0)
+        opt_bytes = plan.opt_state_bytes_per_device(state_placed)
+        step = partition.make_train_step(plan, loss_fn, opt,
+                                         num_groups=data)
+
+        def run_chain(n_steps):
+            p = plan.replicate(jax.tree_util.tree_map(host_np, params0))
+            s = plan.place_opt_state(
+                opt, params0,
+                opt.init(jax.tree_util.tree_map(host_np, params0)))
+            p, s, loss = step(p, s, g_dev, l_dev)  # compile + settle
+            jax.block_until_ready(loss)
+            t0 = time.perf_counter()
+            for _ in range(n_steps):
+                p, s, loss = step(p, s, g_dev, l_dev)
+            jax.block_until_ready((p, s, loss))
+            return ((time.perf_counter() - t0) / n_steps * 1e6,
+                    float(loss))
+
+        return bs, opt_bytes, run_chain
+
+    n_steps = 6 if quick else 10
+    repeats = 3
+    points = {(d, m): make_point(d, m) for d, m in shapes}
+    best, last_loss = {}, {}
+    for _ in range(repeats):  # interleave mesh shapes across rounds
+        for key, (bs, _, run_chain) in points.items():
+            t, loss = run_chain(n_steps)
+            best[key] = min(best.get(key, float("inf")), t)
+            last_loss[key] = loss
+
+    results, opt_bytes = {}, {}
+    for (d, m), (bs, ob, _) in points.items():
+        name = f"{d}x{m}"
+        results[name] = best[(d, m)]
+        opt_bytes[name] = ob
+        emit(f"mp_scaling_{name}", best[(d, m)],
+             f"opt_state_bytes_per_device={ob};global_batch={bs};"
+             f"loss={last_loss[(d, m)]:.4f}")
+
+    shrink = opt_bytes["1x1"] / max(opt_bytes["4x2"], 1)
+    emit("mp_scaling_opt_state", 0.0,
+         f"shrink_d1_to_d4={shrink:.2f}x;"
+         f"bytes={[opt_bytes[f'{d}x{m}'] for d, m in shapes]}")
+    out_path = Path("results/BENCH_mp_scaling.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps({
+        "benchmark": "mp_scaling",
+        "mode": "2-D (data, model) mesh: ZeRO-1 optimizer-state memory "
+                "per device + train-step time per mesh shape",
+        "workload": {"per_data_shard_batch": per_group, "hidden_dim": dim,
+                     "mpnn_rounds": rounds, "edge_set": "writes",
+                     "embedding_rows": emb},
+        # deliberately NOT under a "us_per_call" key: on host-forced CPU
+        # devices these timings swing with core contention, and the JSON's
+        # own note declares them a trajectory record — a us_per_call key
+        # would make check_bench auto-gate them at 25% anyway
+        "step_time_us": results,
+        "opt_state_bytes_per_device": opt_bytes,
+        "opt_state_shrink_d1_to_d4": shrink,
+        "loss_per_shape": {k: round(v, 6) for k, v in
+                           ((f"{d}x{m}", last_loss[(d, m)])
+                            for d, m in shapes)},
+        "backend": jax.default_backend(),
+        "num_devices": len(jax.devices()),
+        "host_cores": os.cpu_count(),
+        "note": "ZeRO-1 shards AdamW m/v over the data axis: bytes/device "
+                "shrink ~data_size (the step scalar and indivisible "
+                "leaves stay replicated).  On host-forced CPU devices the "
+                "model-axis all-gathers are pure overhead, so step times "
+                "are a trajectory record, not a gate.",
+        "gates": {"opt_state_shrink_d1_to_d4": {"min": 1.8}},
     }, indent=1))
 
 
@@ -714,6 +853,7 @@ def main(argv=None):
         "kernels": bench_kernels,
         "dispatch": bench_dispatch,
         "dp_scaling": bench_dp_scaling,
+        "mp_scaling": bench_mp_scaling,
         "sampler_service": bench_sampler_service,
         "archs": bench_archs,
     }

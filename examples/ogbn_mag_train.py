@@ -11,11 +11,21 @@ is qualitatively faithful to Table 1.
     PYTHONPATH=src python examples/ogbn_mag_train.py
 
 Data-parallel over N (possibly host-forced) devices — the batch becomes a
-super-batch of N padded component groups sharded over a ("data",) mesh;
-loss matches the 1-device run on the same seed:
+super-batch of padded component groups sharded over the mesh's "data"
+axis; loss matches the 1-device run on the same seed:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
         python examples/ogbn_mag_train.py --steps 3 --num-devices 8
+
+``--model-parallel M`` folds the mesh to 2-D (data = N/M rows x model = M
+columns): node/edge feature dims shard over "model" (all-gathered exactly
+at the broadcast/pool boundary of repro.core.ops) and AdamW state is
+ZeRO-1-sharded over "data" — same loss again, with per-device optimizer
+state shrunk by the data factor:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+        python examples/ogbn_mag_train.py --steps 3 --num-devices 8 \\
+        --model-parallel 2
 
 With ``--sampler service`` the training stream comes from the async
 sampling service instead (repro.sampling_service): a fleet of sampler
@@ -51,8 +61,12 @@ ap.add_argument("--hidden", type=int, default=64)
 ap.add_argument("--steps", type=int, default=None,
                 help="cap total train steps (smoke runs use --steps 3)")
 ap.add_argument("--num-devices", type=int, default=1,
-                help="data-parallel replicas; >1 needs that many devices "
+                help="total mesh devices; >1 needs that many devices "
                      "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+ap.add_argument("--model-parallel", type=int, default=1,
+                help="model columns of the 2-D mesh (must divide "
+                     "--num-devices); feature dims shard over 'model', "
+                     "optimizer state ZeRO-1-shards over 'data'")
 ap.add_argument("--sampler", choices=["inprocess", "service"],
                 default="inprocess",
                 help="'service' streams training batches from the async "
@@ -132,14 +146,20 @@ class InitStates(Module):
 gnn = vanilla_mpnn(edges, node_dims, message_dim=dim, hidden_dim=dim,
                    num_rounds=4, use_layer_norm=True)
 
-# 4. orchestration (paper §8.4) — the batch is a super-batch of
-# `num_devices` padded component groups; SizeConstraints are per group, so
-# the same seed trains to the same loss at any device count.
+# 4. orchestration (paper §8.4) — the batch is a super-batch of one
+# padded component group per DATA shard (= num_devices / model_parallel);
+# SizeConstraints are per group, so the same seed trains to the same loss
+# at any device count.
 bs = 16
 ndev = args.num_devices
-if bs % ndev:
-    raise SystemExit(f"--num-devices {ndev} must divide batch size {bs}")
-sizes = find_size_constraints(graphs, bs // ndev)
+mp = args.model_parallel
+if ndev % mp:
+    raise SystemExit(f"--model-parallel {mp} must divide "
+                     f"--num-devices {ndev}")
+rep = ndev // mp  # data shards = component groups per super-batch
+if bs % rep:
+    raise SystemExit(f"data shards {rep} must divide batch size {bs}")
+sizes = find_size_constraints(graphs, bs // rep)
 task = RootNodeMulticlassClassification("paper", 8, dim)
 
 
@@ -154,7 +174,7 @@ def super_batch_labels(graph):
 
 
 def batches_for(gs):
-    batcher = GraphBatcher(gs, bs, sizes, seed=0, num_replicas=ndev)
+    batcher = GraphBatcher(gs, bs, sizes, seed=0, num_replicas=rep)
 
     def gen(epoch):
         for graph in batcher.epoch(epoch):
@@ -167,21 +187,22 @@ run_kwargs = dict(model_fn=lambda: (InitStates(), gnn), task=task,
                   epochs=args.epochs, learning_rate=3e-3, total_steps=600,
                   eval_batches=lambda: batches_for(test_graphs)(0),
                   ckpt_dir="", log_every=20, num_devices=ndev,
-                  max_steps=args.steps)
+                  model_parallel=mp, max_steps=args.steps)
 if args.sampler == "service":
     # same plan (batch_size/seed/num_replicas) + same per-root sampling
     # seeds as the in-process path => bit-identical batches, same loss —
     # but Algorithm 1 + merge + pad run in the worker fleet, not here
     with SamplingService(store, spec, train_roots, batch_size=bs,
                          sizes=sizes, num_workers=args.sampler_workers,
-                         num_replicas=ndev, seed=0, base_seed=0) as svc:
+                         num_replicas=rep, seed=0, base_seed=0) as svc:
         result = run(sampler="service", service=svc,
                      label_fn=super_batch_labels, **run_kwargs)
 else:
     result = run(train_batches=batches_for(train_graphs), **run_kwargs)
 print(f"final loss {result.train_loss:.4f}  "
       f"test accuracy {result.metrics['eval_accuracy']:.4f}  "
-      f"({ndev} device(s), {result.step} steps, {args.sampler} sampler)")
+      f"({ndev} device(s) = {rep} data x {mp} model, {result.step} steps, "
+      f"{args.sampler} sampler)")
 if args.steps is None:  # full runs keep the accuracy gate; --steps N
     assert result.metrics["eval_accuracy"] > 0.5  # smoke runs skip it
 print("ogbn_mag_train OK")

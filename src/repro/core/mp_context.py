@@ -1,0 +1,56 @@
+"""Trace-time model-parallel context — the core-layer hook the 2-D
+partitioning plan (repro.distributed.partition.MeshPlan) drives.
+
+Lives at the core layer (dependency-free besides jax) so `repro.core.ops`
+can consume it without importing `repro.distributed` — the plan *sets*
+the context around its shard_map bodies, the ops *read* it to split the
+feature axis and place the cross-device all-gather at the pool boundary.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+
+_tls = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    """The model axis as visible inside a shard_map body.  `split` takes
+    this device's feature chunk, `gather` is the boundary all-gather."""
+
+    axis: str
+    size: int
+
+    def can_split(self, x) -> bool:
+        return (getattr(x, "ndim", 0) >= 2
+                and x.shape[-1] % self.size == 0
+                and x.shape[-1] >= self.size)
+
+    def split(self, x):
+        w = x.shape[-1] // self.size
+        i = jax.lax.axis_index(self.axis)
+        return jax.lax.dynamic_slice_in_dim(x, i * w, w, axis=x.ndim - 1)
+
+    def gather(self, x):
+        return jax.lax.all_gather(x, self.axis, axis=x.ndim - 1, tiled=True)
+
+
+@contextlib.contextmanager
+def model_parallel_trace(axis: Optional[str], size: int):
+    """Make the model axis visible to `repro.core.ops` while tracing a
+    shard_map body.  No-op for size <= 1 (the 1-D data-parallel path)."""
+    prev = getattr(_tls, "mp", None)
+    _tls.mp = ModelContext(axis, size) if axis and size > 1 else None
+    try:
+        yield _tls.mp
+    finally:
+        _tls.mp = prev
+
+
+def current_model_context() -> Optional[ModelContext]:
+    return getattr(_tls, "mp", None)

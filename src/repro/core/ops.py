@@ -22,11 +22,45 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import mp_context
 from repro.core.graph_tensor import (CONTEXT, GraphTensor, HIDDEN_STATE,
                                      SOURCE, TARGET)
 from repro.kernels import dispatch as kernel_dispatch
 
 _REDUCE_TYPES = ("sum", "mean", "max", "min")
+
+
+# ---------------------------------------------------------------------------
+# Feature-dim model parallelism (driven by the MeshPlan of
+# repro.distributed.partition through repro.core.mp_context).
+#
+# Inside a model-parallel shard_map body the segment reductions at the
+# broadcast/pool exchange boundary split the trailing feature axis over
+# the "model" mesh axis: the reduction runs on this device's feature
+# chunk (so kernel dispatch budgets VMEM from the per-shard width) and
+# the pooled result is all-gathered back to full width — the one
+# cross-device exchange of the model-parallel contract.  Broadcast
+# (`jnp.take`) needs no collective: its input is already full width
+# (gathered at step entry / at the previous pool exit) and a gather of a
+# replicated value is communication-free.
+#
+# Chunks are exact slices, reductions are feature-independent and the
+# gather concatenates them in mesh order, so results are bit-identical to
+# the unsharded path at any model_parallel factor.  Widths the model axis
+# does not divide fall back to the unsharded op.
+# ---------------------------------------------------------------------------
+
+def _mp_segment_reduce(value, seg_ids, n_segments, reduce_type):
+    """Segment reduction with the feature axis split over the model mesh
+    axis (all-gather at the pool boundary); unsharded outside a
+    model-parallel trace context."""
+    ctx = mp_context.current_model_context()
+    if ctx is not None and ctx.can_split(value):
+        out = kernel_dispatch.segment_reduce(ctx.split(value), seg_ids,
+                                             n_segments, reduce_type)
+        return ctx.gather(out)
+    return kernel_dispatch.segment_reduce(value, seg_ids, n_segments,
+                                          reduce_type)
 
 
 def use_kernels(enabled: bool) -> None:
@@ -82,8 +116,7 @@ def pool_edges_to_node(graph: GraphTensor, edge_set_name: str, tag: str,
     value = _resolve_feature(es, feature_name, feature_value)
     num_nodes = graph.node_sets[node_set_name].capacity
     seg_ids = jnp.where(es.mask(), idx, num_nodes)  # padding -> dropped
-    return kernel_dispatch.segment_reduce(value, seg_ids, num_nodes,
-                                          reduce_type)
+    return _mp_segment_reduce(value, seg_ids, num_nodes, reduce_type)
 
 
 def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
@@ -97,13 +130,13 @@ def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
     emask_b = emask.reshape(emask.shape + (1,) * (feature_value.ndim - 1))
     seg_ids = jnp.where(emask, idx, num_nodes)
     # max-shift for stability, then exp-sum — both dispatched reductions
-    seg_max = kernel_dispatch.segment_reduce(feature_value, seg_ids,
-                                             num_nodes, "max")
+    # (feature-split over the model axis inside a model-parallel trace)
+    seg_max = _mp_segment_reduce(feature_value, seg_ids, num_nodes, "max")
     shifted = jnp.where(emask_b,
                         feature_value - jnp.take(seg_max, idx, axis=0),
                         -jnp.inf)
     exp = jnp.where(emask_b, jnp.exp(shifted), 0)
-    seg_sum = kernel_dispatch.segment_reduce(exp, seg_ids, num_nodes, "sum")
+    seg_sum = _mp_segment_reduce(exp, seg_ids, num_nodes, "sum")
     denom = jnp.take(seg_sum, idx, axis=0)
     return exp / jnp.maximum(denom, 1e-37)
 
@@ -138,8 +171,7 @@ def _pool_items_to_context(piece, num_components, reduce_type, value):
         raise ValueError(f"unknown reduce_type {reduce_type!r}")
     comp = jnp.where(piece.mask(), piece.component_ids(),
                      num_components)  # padding -> dropped
-    return kernel_dispatch.segment_reduce(value, comp, num_components,
-                                          reduce_type)
+    return _mp_segment_reduce(value, comp, num_components, reduce_type)
 
 
 def pool_nodes_to_context(graph: GraphTensor, node_set_name: str,

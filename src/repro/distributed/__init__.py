@@ -2,6 +2,10 @@ from repro.distributed.sharding import (  # noqa: F401
     ShardingContext, current_context, data_axis_names, data_parallel_size,
     logical_to_spec, param_shardings, shard_activation, use_sharding,
 )
+from repro.distributed.partition import (  # noqa: F401
+    MeshPlan, current_model_context, make_mesh, make_plan,
+    model_parallel_trace, plan_for,
+)
 from repro.distributed.graph_sharding import (  # noqa: F401
     data_spec, graph_logical_axes, graph_shardings, make_data_mesh,
     make_dp_eval_step, make_dp_train_step, put_super_batch, replicate,

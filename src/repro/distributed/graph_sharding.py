@@ -1,213 +1,92 @@
 """Data-parallel sharding for GraphTensor super-batches (paper §7).
 
+.. deprecated::
+    This module is the PR-2 1-D ("data",) surface, kept as a thin alias
+    layer over :mod:`repro.distributed.partition` — the unified 2-D
+    ("data", "model") partitioning subsystem that now owns per-leaf specs,
+    placement, the model-parallel gather boundary and ZeRO-1 optimizer
+    sharding.  New code should build a `partition.MeshPlan` directly;
+    every function below delegates to the plan of its mesh so existing
+    callers (tests, benchmarks) keep working unchanged.
+
 The unit of data parallelism is the padded *component group*: the batcher
 (`repro.data.pipeline.GraphBatcher(num_replicas=R)`) emits stacked
 GraphTensors whose every leaf has a leading ``[R, ...]`` group axis, each
-group independently merged and padded to one SizeConstraints.  This module
-
-* maps every leaf of such a super-batch to a `NamedSharding` over the
-  mesh's data axes via the *existing* logical-axis rule tables in
-  `repro.distributed.sharding` (the leading group axis is the logical
-  "batch" axis; all trailing dims replicate),
-* places host-side super-batches onto the mesh (`put_super_batch`), and
-* builds the data-parallel train/eval steps: a jit'd (pjit) step whose
-  grads come from a `shard_map` body that computes per-shard loss/grads on
-  its *local* groups and cross-replica ``psum``s them (`lax.pmean` =
-  psum / n_shards).  Inside the body every GraphTensor has per-shard
-  shapes, so `repro.kernels.dispatch` eligibility and VMEM budgeting see
-  per-shard edge counts by construction — never the global batch.
-
-Why only the leading axis shards: adjacency indices are *group-local*
-(each group was merged and padded independently, so `source`/`target`
-index into that group's own node sets).  Sharding any trailing dim would
-split node/edge capacities across devices and break index locality; the
-whole point of the super-batch layout is that no cross-device exchange
-happens inside the model — only the gradient psum crosses replicas.
+group independently merged and padded to one SizeConstraints.  The leading
+group axis is the logical "batch" axis, resolved through the same rule
+tables as everything else; adjacency indices are group-local by
+construction, so no gather/scatter crosses data shards inside the model —
+only the gradient psum (and, on a 2-D mesh, the feature-dim all-gathers
+at the ops boundary) cross devices.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.graph_tensor import (GraphTensor, stack_graphs, stack_size,
-                                     unstack_graph)
-from repro.distributed.sharding import (DEFAULT_ACT_RULES,
-                                        DEFAULT_PARAM_RULES, ShardingContext,
-                                        data_axis_names, data_parallel_size)
+from repro.core.graph_tensor import GraphTensor
+from repro.distributed import partition
 
-try:  # jax >= 0.6 exports shard_map at the top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-
-def _shard_map_norep(f, mesh, in_specs, out_specs):
-    """shard_map without the replication checker: our replicated outputs
-    are pmean/psum results, so the proof adds tracing cost without value.
-    The disabling kwarg was renamed across jax versions (check_rep ->
-    check_vma); fall back to defaults when neither exists."""
-    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
-        try:
-            return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, **kw)
-        except TypeError:
-            continue
-    raise TypeError("shard_map rejected all known signatures")
-
-
-GROUP_AXIS = "batch"  # logical name of the leading component-group axis
+GROUP_AXIS = partition.GROUP_AXIS  # logical name of the leading group axis
 
 
 def make_data_mesh(num_devices: Optional[int] = None) -> Mesh:
-    """1-D ("data",) mesh over the first `num_devices` devices."""
-    devices = jax.devices()
-    n = num_devices or len(devices)
-    if len(devices) < n:
-        raise RuntimeError(
-            f"need {n} devices, have {len(devices)} — on CPU run under "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
-    return Mesh(np.asarray(devices[:n]), ("data",))
+    """1-D ("data",) mesh over the first `num_devices` devices.
+
+    .. deprecated:: thin alias over ``partition.make_mesh`` — use
+       ``partition.make_mesh(n, model_parallel=m)`` for the 2-D mesh."""
+    return partition.make_mesh(num_devices)
 
 
 def graph_logical_axes(graph: GraphTensor):
-    """Logical-axes tree for a stacked super-batch: every leaf is
-    ("batch", None, ...) — leading group axis shards, the rest replicate."""
-    return jax.tree_util.tree_map(
-        lambda x: (GROUP_AXIS,) + (None,) * (x.ndim - 1), graph)
-
-
-_SHARDING_CACHE: dict = {}
+    """Logical-axes tree for a stacked super-batch: leading "batch" group
+    axis, trailing "feature" axis on rank>=3 leaves (see
+    ``partition.graph_logical_axes``)."""
+    return partition.graph_logical_axes(graph)
 
 
 def graph_shardings(mesh: Mesh, graph: GraphTensor, *, rules=None):
     """NamedSharding per leaf, resolved through the logical-axis rule
-    tables (so a ("pod", "data") mesh shards groups over both axes and a
-    ("data",) mesh over one, with the same one rule).  Results are cached
-    per (mesh, tree structure, leaf shapes) — the training loop calls
-    this every step on identically-shaped batches."""
-    leaves, treedef = jax.tree_util.tree_flatten(graph)
-    key = (mesh, tuple(rules.items()) if rules else None, treedef,
-           tuple(x.shape for x in leaves))
-    cached = _SHARDING_CACHE.get(key)
-    if cached is not None:
-        return cached
-    ctx = ShardingContext(mesh, DEFAULT_PARAM_RULES,
-                          dict(DEFAULT_ACT_RULES, **(rules or {})))
-    out = jax.tree_util.tree_map(
-        lambda x: NamedSharding(
-            mesh,
-            ctx.resolve((GROUP_AXIS,) + (None,) * (x.ndim - 1),
-                        ctx.act_rules, shape=x.shape)),
-        graph)
-    _SHARDING_CACHE[key] = out
-    return out
+    tables.  On a 1-D mesh this is the PR-2 data-only contract (leading
+    group axis shards, the rest replicate); on a ("data", "model") mesh
+    trailing feature axes additionally shard over "model"."""
+    return partition.plan_for(mesh, act_rules=rules).graph_shardings(graph)
 
 
 def put_super_batch(graph: GraphTensor, labels, mesh: Mesh):
     """Place a (host-side) super-batch and its per-group labels onto the
-    mesh.  A scalar GraphTensor is promoted to a [1, ...] stack so the
-    1-device path runs the identical program."""
-    if stack_size(graph) is None:
-        graph = stack_graphs([graph])
-        labels = np.asarray(labels)[None]
-    n_groups = stack_size(graph)
-    dp = data_parallel_size(mesh)
-    if n_groups % dp:
-        raise ValueError(
-            f"super-batch has {n_groups} component groups, not divisible "
-            f"by the mesh's {dp} data shards")
-    graph = jax.tree_util.tree_map(jax.device_put, graph,
-                                   graph_shardings(mesh, graph))
-    labels = jax.device_put(jnp.asarray(labels),
-                            NamedSharding(mesh, data_spec(mesh)))
-    return graph, labels
+    mesh (see ``partition.MeshPlan.put_super_batch``)."""
+    return partition.plan_for(mesh).put_super_batch(graph, labels)
 
 
 def replicate(tree, mesh: Mesh):
-    """device_put a pytree fully replicated over the mesh (the placement
-    the dp train step's donated params/opt_state expect)."""
-    return jax.device_put(tree, NamedSharding(mesh, P()))
+    """device_put a pytree fully replicated over the mesh."""
+    return partition.plan_for(mesh).replicate(tree)
 
 
 def data_spec(mesh: Mesh) -> P:
     """PartitionSpec sharding a leading batch/group dim over the mesh's
     data axes (shared by the GNN super-batch and token-batch paths)."""
-    axes = data_axis_names(mesh)
-    return P(axes if len(axes) > 1 else axes[0]) if axes else P()
-
-
-def _local_mean(loss_fn, params, graph_stack, labels):
-    """Mean loss over this shard's local component groups (a static Python
-    loop — the local group count is known at trace time)."""
-    groups = unstack_graph(graph_stack)
-    total = 0.0
-    for i, g in enumerate(groups):
-        total = total + loss_fn(params, g, labels[i])
-    return total / len(groups)
-
-
-def _pmean(tree, axis):
-    return jax.tree_util.tree_map(lambda x: jax.lax.pmean(x, axis), tree)
+    return partition.plan_for(mesh).data_spec()
 
 
 def make_dp_train_step(mesh: Mesh, loss_fn: Callable, optimizer, *,
-                       num_groups: int) -> Callable:
-    """Data-parallel training step.
-
-    loss_fn(params, scalar_graph, group_labels) -> scalar loss.  Returns a
-    jit'd ``(params, opt_state, graph_stack, labels) -> (params, opt_state,
-    loss)`` where graph_stack is a [num_groups, ...] super-batch sharded
-    over the data axes.  Gradients are psum-averaged across replicas inside
-    shard_map; the optimizer update then runs replicated.
-    """
-    dp = data_parallel_size(mesh)
-    if num_groups % dp:
-        raise ValueError(f"num_groups {num_groups} not divisible by "
-                         f"{dp} data shards")
-    axis = data_axis_names(mesh)
-
-    def shard_grads(params, graph_stack, labels):
-        loss, grads = jax.value_and_grad(
-            lambda p: _local_mean(loss_fn, p, graph_stack, labels))(params)
-        return jax.lax.pmean(loss, axis), _pmean(grads, axis)
-
-    sharded = _shard_map_norep(
-        shard_grads, mesh,
-        in_specs=(P(), data_spec(mesh), data_spec(mesh)),
-        out_specs=(P(), P()))
-
-    def train_step(params, opt_state, graph_stack, labels):
-        loss, grads = sharded(params, graph_stack, labels)
-        params, opt_state, _ = optimizer.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    # donate params/opt_state: the returned trees reuse the input buffers,
-    # which matters on replicated state (every leaf otherwise reallocates
-    # on every device every step)
-    return jax.jit(train_step, donate_argnums=(0, 1))
+                       num_groups: int, zero1: bool = False) -> Callable:
+    """Data-parallel training step (delegates to
+    ``partition.make_train_step``).  ZeRO-1 is OFF on this deprecated
+    surface: legacy callers place replicated state and may pass
+    optimizers without the `state_axes`/`axis_name` ZeRO contract.  Pass
+    ``zero1=True`` (and place the state with
+    ``MeshPlan.place_opt_state``) — or build the step via
+    ``partition.make_train_step``, where it defaults on — to shard the
+    optimizer state over "data"."""
+    return partition.make_train_step(partition.plan_for(mesh), loss_fn,
+                                     optimizer, num_groups=num_groups,
+                                     zero1=zero1)
 
 
 def make_dp_eval_step(mesh: Mesh, metric_fn: Callable) -> Callable:
-    """Data-parallel eval step.  metric_fn(params, scalar_graph,
-    group_labels) -> tuple of scalars; each is summed over groups and
-    psum'd across replicas (counts, not means — divide at the caller)."""
-
-    def shard_metrics(params, graph_stack, labels):
-        groups = unstack_graph(graph_stack)
-        totals = None
-        for i, g in enumerate(groups):
-            out = metric_fn(params, g, labels[i])
-            totals = out if totals is None else tuple(
-                a + b for a, b in zip(totals, out))
-        return tuple(jax.lax.psum(t, data_axis_names(mesh))
-                     for t in totals)
-
-    sharded = _shard_map_norep(
-        shard_metrics, mesh,
-        in_specs=(P(), data_spec(mesh), data_spec(mesh)),
-        out_specs=P())
-    return jax.jit(sharded)
+    """Data-parallel eval step (delegates to ``partition.make_eval_step``)."""
+    return partition.make_eval_step(partition.plan_for(mesh), metric_fn)

@@ -13,6 +13,9 @@ Logical axes used across the codebase:
   heads / kv_heads / mlp / vocab / expert -> TP/EP over "model"
   seq       -> SP over "model" for long-context decode states (opt-in)
   layers    -> stacked-scan leading dim; unsharded (or PP stage axis)
+  feature   -> TP over "model" for GraphTensor node/edge feature dims (the
+               trailing axes of a placed super-batch; see
+               repro.distributed.partition for the gather boundary)
 """
 from __future__ import annotations
 
@@ -40,6 +43,7 @@ DEFAULT_PARAM_RULES: dict[str, Any] = {
     "expert": "model",
     "layers": None,
     "seq": None,
+    "feature": "model",
 }
 
 DEFAULT_ACT_RULES: dict[str, Any] = {
@@ -53,6 +57,7 @@ DEFAULT_ACT_RULES: dict[str, Any] = {
     "expert": "model",
     "seq": None,
     "layers": None,
+    "feature": "model",
 }
 
 

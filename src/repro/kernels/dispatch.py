@@ -58,45 +58,68 @@ def enabled() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Data parallelism: eligibility must budget VMEM from PER-SHARD shapes.
+# Partitioned tracing: eligibility must budget VMEM from PER-SHARD shapes.
 #
 # Two ways per-shard shapes reach the decision functions:
 #
-#   * shard_map / vmap step (repro.distributed.graph_sharding): the loss is
-#     traced with per-shard GraphTensors, so `values.shape` is already the
-#     per-shard shape and nothing else is needed — this is the default path;
+#   * shard_map step (repro.distributed.partition / graph_sharding): the
+#     loss is traced with per-shard GraphTensors — leading dims split over
+#     "data" by the in_specs, feature widths split over "model" by the
+#     boundary ops in repro.core.ops — so `values.shape` is already the
+#     per-shard shape and nothing else is needed; this is the default path;
 #   * GSPMD auto-sharding over GLOBAL shapes (e.g. a pjit'd step whose batch
 #     leaves keep the full super-batch dims at trace time): the step factory
-#     must wrap tracing in `with dispatch.data_parallel(n_shards):` so row
-#     and segment counts are divided down to what one device actually sees.
+#     must wrap tracing in the MeshPlan's `dispatch_context()` (i.e.
+#     `with dispatch.partitioned(data=n, model=m):`) so row/segment counts
+#     divide by the data shards and feature widths by the model shards.
 #     Budgeting from global shapes would wrongly reject shard-sized work
 #     ("exceeds VMEM") or pick edge blocks tuned for arrays 8x too large.
 # ---------------------------------------------------------------------------
 
 _DATA_SHARDS = 1
+_MODEL_SHARDS = 1
 
 
 @contextlib.contextmanager
-def data_parallel(num_shards: int):
-    """Trace-time context: decisions divide row/segment counts by
-    `num_shards`.  Only for steps traced with global batch shapes; the
-    shard_map path sees per-shard shapes already and must not use this."""
-    global _DATA_SHARDS
-    prev = _DATA_SHARDS
-    _DATA_SHARDS = max(int(num_shards), 1)
+def partitioned(data: int = 1, model: int = 1):
+    """Trace-time context for the 2-D ("data", "model") mesh: decisions
+    divide row/segment counts by `data` and feature widths by `model`.
+    Only for steps traced with global batch shapes; the shard_map path
+    sees per-shard shapes already and must not use this."""
+    global _DATA_SHARDS, _MODEL_SHARDS
+    prev = (_DATA_SHARDS, _MODEL_SHARDS)
+    _DATA_SHARDS = max(int(data), 1)
+    _MODEL_SHARDS = max(int(model), 1)
     try:
         yield
     finally:
-        _DATA_SHARDS = prev
+        _DATA_SHARDS, _MODEL_SHARDS = prev
+
+
+def data_parallel(num_shards: int):
+    """The 1-D special case of :func:`partitioned` (kept for callers of
+    the PR-2 data-only contract)."""
+    return partitioned(data=num_shards)
 
 
 def data_shards() -> int:
     return _DATA_SHARDS
 
 
+def model_shards() -> int:
+    return _MODEL_SHARDS
+
+
 def _per_shard(n: int) -> int:
     """Per-shard count for a leading dim that GSPMD splits over data."""
     return -(-int(n) // _DATA_SHARDS)  # ceil: the largest shard decides
+
+
+def _per_shard_feature(d: int) -> int:
+    """Per-shard width for a feature dim split over the model axis (the
+    boundary ops split only evenly-divisible widths; ceil covers the
+    GSPMD-uneven case conservatively)."""
+    return -(-int(d) // _MODEL_SHARDS)
 
 
 # ---------------------------------------------------------------------------
@@ -275,12 +298,16 @@ def segment_reduce_decision(shape: tuple, dtype, n_segments: int,
         return Decision(False, f"non-float dtype {dtype} routes to "
                         "reference")
     itemsize = dtype.itemsize
-    # Per-device counts: under data_parallel(n) the trace-time shapes are
-    # global and one shard owns ~1/n of the rows and segments.
+    # Per-device counts: under partitioned(data=n, model=m) the trace-time
+    # shapes are global; one device owns ~1/n of the rows/segments and
+    # ~1/m of the feature width.
     n_rows = _per_shard(shape[0])
     n_seg = _per_shard(n_segments)
+    d = _per_shard_feature(d)
     sharded = f" (per-shard of {_DATA_SHARDS} data shards)" \
         if _DATA_SHARDS > 1 else ""
+    if _MODEL_SHARDS > 1:
+        sharded += f" (per-shard of {_MODEL_SHARDS} model shards)"
     if n_seg > MAX_SEGMENTS:
         return Decision(False,
                         f"n_segments {n_seg}{sharded} > {MAX_SEGMENTS}")

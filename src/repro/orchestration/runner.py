@@ -134,6 +134,7 @@ def run(*, train_batches: Optional[Callable[[int],
         log_every: int = 20,
         seed: int = 0,
         num_devices: Optional[int] = None,
+        model_parallel: int = 1,
         max_steps: Optional[int] = None,
         sampler: str = "in_process",
         service=None,
@@ -156,16 +157,21 @@ def run(*, train_batches: Optional[Callable[[int],
     ``double_buffer`` overrides the per-sampler default (service: on,
     in_process: off).
 
-    With ``num_devices`` the runner trains data-parallel over a
-    ``("data",)`` mesh: train_batches must yield stacked super-batches
-    ([R, ...] component groups from ``GraphBatcher(num_replicas=R)``,
-    labels [R, C]); scalar batches are promoted to [1, ...].  The train
-    step becomes the pjit'd shard_map step of
-    ``repro.distributed.graph_sharding`` — per-shard forward/backward,
-    cross-replica gradient psum, replicated optimizer update — and batches
-    are device_put with NamedShardings over the data axis.  Loss equals
-    the 1-device run on the same seed (component groups are weighted
-    equally, so the mean-of-group-means is the global mean).
+    With ``num_devices`` the runner trains over the 2-D
+    ``("data", "model")`` mesh of ``repro.distributed.partition``:
+    ``model_parallel`` devices form each model column (1 = the PR-2
+    data-only path), the remaining factor is data parallelism.
+    train_batches must yield stacked super-batches ([R, ...] component
+    groups from ``GraphBatcher(num_replicas=R)`` with R divisible by the
+    data size, labels [R, C]); scalar batches are promoted to [1, ...].
+    The train step is ``partition.make_train_step`` — per-shard
+    forward/backward with feature-dim all-gathers at the broadcast/pool
+    boundary, gradient pmean over the mesh, ZeRO-1 optimizer update on
+    "data"-sharded AdamW state — and batches are device_put with the
+    plan's 2-D NamedShardings (so the double-buffered placement lands
+    pre-sharded).  Loss equals the 1-device run on the same seed
+    (component groups are weighted equally, so the mean-of-group-means is
+    the global mean; feature chunks recompose exactly).
     """
     if sampler == "service":
         if service is None or label_fn is None:
@@ -223,16 +229,21 @@ def run(*, train_batches: Optional[Callable[[int],
 
     eval_step = jax.jit(metric_fn)
 
-    mesh = None
+    plan = None
     dp_train_step = dp_eval_step = None
     if num_devices is not None:
-        from repro.distributed import graph_sharding as gsh
-        mesh = gsh.make_data_mesh(num_devices)
+        from repro.distributed import partition
+        plan = partition.make_plan(num_devices,
+                                   model_parallel=model_parallel)
+    elif model_parallel > 1:
+        raise ValueError("model_parallel > 1 needs num_devices=")
 
     def place(graph, labels):
-        """Host batch -> device batch (sharded over the mesh in dp mode)."""
-        if mesh is not None:
-            return gsh.put_super_batch(graph, labels, mesh)
+        """Host batch -> device batch (the plan's 2-D sharding in mesh
+        mode — `device_prefetch` then lands super-batches pre-sharded,
+        no resharding copy on the first step)."""
+        if plan is not None:
+            return plan.put_super_batch(graph, labels)
         return (jax.tree_util.tree_map(jnp.asarray, graph),
                 jnp.asarray(labels))
 
@@ -252,13 +263,15 @@ def run(*, train_batches: Optional[Callable[[int],
             if max_steps is not None and step >= max_steps:
                 placed.close()  # joins the device_prefetch thread
                 break
-            if mesh is not None:
+            if plan is not None:
                 if dp_train_step is None:
                     from repro.core.graph_tensor import stack_size
-                    dp_train_step = gsh.make_dp_train_step(
-                        mesh, loss_fn, opt, num_groups=stack_size(graph))
-                    params = gsh.replicate(params, mesh)
-                    opt_state = gsh.replicate(opt_state, mesh)
+                    dp_train_step = partition.make_train_step(
+                        plan, loss_fn, opt, num_groups=stack_size(graph))
+                    params = plan.replicate(params)
+                    # ZeRO-1: AdamW m/v land "data"-sharded
+                    opt_state = plan.place_opt_state(opt, params,
+                                                     opt_state)
                 params, opt_state, loss = dp_train_step(
                     params, opt_state, graph, labels)
             else:
@@ -279,9 +292,10 @@ def run(*, train_batches: Optional[Callable[[int],
         correct = total = 0.0
         for graph, labels in eval_batches():
             graph, labels = place(graph, labels)
-            if mesh is not None:
+            if plan is not None:
                 if dp_eval_step is None:
-                    dp_eval_step = gsh.make_dp_eval_step(mesh, metric_fn)
+                    dp_eval_step = partition.make_eval_step(plan,
+                                                            metric_fn)
                 c, n = dp_eval_step(params, graph, labels)
             else:
                 c, n = eval_step(params, graph, labels)

@@ -10,6 +10,12 @@ shared `BatchPlan` (see `repro.data.grouping`), re-execution is
 idempotent: the same fault-tolerance semantics as
 `repro.distributed.fault_tolerance` checkpoints and the sampler's on-disk
 shards (re-run the unit, get the identical bytes).
+
+With a ``respawn_fn`` the coordinator additionally *replaces* a dead
+worker with a freshly spawned one under the same worker id (at most once
+per worker per epoch — a replacement that dies immediately falls back to
+the survivors), so the fleet returns to full width instead of survivors
+permanently absorbing the dead worker's share of the stream.
 """
 from __future__ import annotations
 
@@ -50,13 +56,19 @@ class DeadFleetError(RuntimeError):
 
 
 class Coordinator:
-    def __init__(self, workers: list[WorkerHandle]):
+    def __init__(self, workers: list[WorkerHandle],
+                 respawn_fn: Optional[callable] = None):
         self.workers = {w.worker_id: w for w in workers}
         self.epoch: Optional[int] = None
         # step -> worker_id (current ownership; rewritten on rebalance)
         self.owner: dict[int, int] = {}
         # worker_id -> steps assigned but not yet delivered
         self.outstanding: dict[int, set[int]] = {}
+        # worker_id -> fresh WorkerHandle (None = no respawn)
+        self.respawn_fn = respawn_fn
+        # dead handles kept for lifecycle cleanup (process joins)
+        self.retired: list[WorkerHandle] = []
+        self._respawned_this_epoch: set[int] = set()
 
     # -- assignment ----------------------------------------------------------
 
@@ -70,6 +82,15 @@ class Coordinator:
         self.epoch = epoch
         self.owner = {}
         self.outstanding = {}
+        self._respawned_this_epoch = set()
+        # sweep silent deaths: a worker that died AFTER flushing its whole
+        # stripe is never caught by the client's read path (nothing blocks
+        # on its socket), so detect-and-respawn here — epoch starts always
+        # begin at full width when a respawn_fn is configured
+        for wid, w in list(self.workers.items()):
+            if w.alive and not w.process_alive():
+                self.mark_dead(wid)
+                self.respawn(wid)
         self._distribute(steps)
 
     def _distribute(self, steps: list[int]) -> None:
@@ -89,6 +110,7 @@ class Coordinator:
                                     {"epoch": self.epoch, "steps": mine})
                 except OSError:
                     self.mark_dead(w.worker_id)
+                    self.respawn(w.worker_id)  # next round may assign to it
                     failed += mine
                     continue
                 self.owner.update({s: w.worker_id for s in mine})
@@ -118,12 +140,34 @@ class Coordinator:
         if w.alive:
             w.close()
 
+    def respawn(self, worker_id: int) -> bool:
+        """Replace a dead worker with a fresh handle under the same id
+        (coordinator-driven respawn).  At most once per worker per epoch,
+        so a replacement that dies immediately cannot respawn-loop; the
+        stream then continues on the survivors as before."""
+        if (self.respawn_fn is None
+                or worker_id in self._respawned_this_epoch):
+            return False
+        self._respawned_this_epoch.add(worker_id)
+        try:
+            fresh = self.respawn_fn(worker_id)
+        except Exception:  # noqa: BLE001 — spawn failure = no respawn
+            return False
+        if fresh is None:
+            return False
+        self.retired.append(self.workers[worker_id])
+        self.workers[worker_id] = fresh
+        return True
+
     def rebalance(self, worker_id: int) -> list[int]:
-        """Reassign a dead worker's undelivered steps to the survivors.
-        Returns the reassigned steps.  Idempotent re-execution: the new
-        owner rebuilds identical batches from the shared plan."""
+        """Reassign a dead worker's undelivered steps — to a freshly
+        respawned replacement (when a respawn_fn is configured) plus the
+        survivors.  Returns the reassigned steps.  Idempotent
+        re-execution: the new owner rebuilds identical batches from the
+        shared plan."""
         self.mark_dead(worker_id)
         pending = sorted(self.outstanding.pop(worker_id, set()))
+        self.respawn(worker_id)
         if not pending:
             return []
         if not self.alive():

@@ -16,6 +16,11 @@ Backends: ``"process"`` (default; `fork` multiprocessing — samplers never
 import jax, so forking a jax-initialized trainer is safe) or ``"thread"``
 (same protocol over the same sockets, for platforms without fork — no
 parallel speedup, but identical semantics and wire path).
+
+``respawn=True`` enables coordinator-driven worker respawn: a dead
+worker is replaced in place by a freshly spawned one under the same id
+(at most once per worker per epoch), so the fleet returns to full width
+instead of survivors permanently absorbing its share of the stream.
 """
 from __future__ import annotations
 
@@ -42,7 +47,7 @@ class SamplingService:
                  sizes: SizeConstraints, num_workers: int = 2,
                  num_replicas: Optional[int] = None, seed: int = 0,
                  rank: int = 0, world: int = 1, base_seed: int = 0,
-                 backend: str = "process"):
+                 backend: str = "process", respawn: bool = False):
         if num_workers < 1:
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
         self.plan = BatchPlan(batch_size, seed=seed, rank=rank, world=world,
@@ -52,37 +57,48 @@ class SamplingService:
         if backend == "process" and "fork" not in mp.get_all_start_methods():
             backend = "thread"  # no fork (e.g. some non-POSIX hosts)
         self.backend = backend
-        handles = []
-        for wid in range(num_workers):
-            trainer_sock, worker_sock = wire.socket_pair()
-            args = (wid, worker_sock, store, spec, self.seeds, self.plan,
-                    sizes, base_seed)
-            if backend == "process":
-                proc = mp.get_context("fork").Process(
-                    target=worker_main, args=args, daemon=True,
-                    name=f"sampler-worker-{wid}")
-                with warnings.catch_warnings():
-                    # jax warns that fork()+multithreading can deadlock —
-                    # if the child calls back into jax.  Sampler workers
-                    # are numpy+sockets only by contract (see worker.py),
-                    # which is what makes the CoW-GraphStore fork safe.
-                    warnings.filterwarnings(
-                        "ignore", message=".*os.fork\\(\\) is incompatible "
-                                          "with multithreaded.*")
-                    proc.start()
-                worker_sock.close()  # child owns its end now
-            elif backend == "thread":
-                proc = threading.Thread(target=worker_main, args=args,
-                                        daemon=True,
-                                        name=f"sampler-worker-{wid}")
-                proc.start()
-            else:
-                raise ValueError(f"unknown backend {backend!r}")
-            handles.append(WorkerHandle(wid, trainer_sock, process=proc))
-        self.coordinator = Coordinator(handles)
+        self._worker_args = (store, spec, base_seed)
+        self._closed = False
+        handles = [self._spawn_worker(wid) for wid in range(num_workers)]
+        # respawn=True: a dead worker is replaced in place (the fleet
+        # returns to full width) instead of survivors absorbing its steps
+        self.coordinator = Coordinator(
+            handles, respawn_fn=self._respawn_worker if respawn else None)
         self.client = StreamClient(self.coordinator, self.plan,
                                    len(self.seeds))
-        self._closed = False
+
+    def _spawn_worker(self, wid: int) -> WorkerHandle:
+        store, spec, base_seed = self._worker_args
+        trainer_sock, worker_sock = wire.socket_pair()
+        args = (wid, worker_sock, store, spec, self.seeds, self.plan,
+                self.sizes, base_seed)
+        if self.backend == "process":
+            proc = mp.get_context("fork").Process(
+                target=worker_main, args=args, daemon=True,
+                name=f"sampler-worker-{wid}")
+            with warnings.catch_warnings():
+                # jax warns that fork()+multithreading can deadlock —
+                # if the child calls back into jax.  Sampler workers
+                # are numpy+sockets only by contract (see worker.py),
+                # which is what makes the CoW-GraphStore fork safe.
+                warnings.filterwarnings(
+                    "ignore", message=".*os.fork\\(\\) is incompatible "
+                                      "with multithreaded.*")
+                proc.start()
+            worker_sock.close()  # child owns its end now
+        elif self.backend == "thread":
+            proc = threading.Thread(target=worker_main, args=args,
+                                    daemon=True,
+                                    name=f"sampler-worker-{wid}")
+            proc.start()
+        else:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        return WorkerHandle(wid, trainer_sock, process=proc)
+
+    def _respawn_worker(self, wid: int) -> Optional[WorkerHandle]:
+        if self._closed:
+            return None
+        return self._spawn_worker(wid)
 
     # -- the GraphBatcher contract -------------------------------------------
 
@@ -110,10 +126,12 @@ class SamplingService:
             return
         self._closed = True
         self.coordinator.stop_all()
+        handles = (list(self.coordinator.workers.values())
+                   + list(self.coordinator.retired))
         # closing the trainer ends unblocks any worker mid-sendall (EPIPE)
-        for w in self.coordinator.workers.values():
+        for w in handles:
             w.close()
-        for w in self.coordinator.workers.values():
+        for w in handles:
             p = w.process
             if p is None:
                 continue

@@ -53,13 +53,32 @@ def _sqsum(x) -> jnp.ndarray:
     return jnp.sum(jnp.square(x.astype(jnp.float32)))
 
 
-def global_norm(tree: PyTree) -> jnp.ndarray:
+def global_norm(tree: PyTree, *, axis_name=None,
+                shard_dims: PyTree | None = None) -> jnp.ndarray:
+    """L2 norm over a gradient tree.
+
+    Under ZeRO-1 (repro.distributed.partition) each leaf may be this data
+    shard's *slice*: pass ``axis_name`` (the data mesh axes) and
+    ``shard_dims`` (per-leaf int, -1 = replicated) and the squared sum of
+    sliced leaves is psum-corrected across shards, while replicated
+    leaves contribute once — so every shard computes the exact full norm.
+    """
+    if axis_name is None or shard_dims is None:
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.sqrt(sum(_sqsum(x) for x in leaves))
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(_sqsum(x) for x in leaves))
+    dims = jax.tree_util.tree_leaves(shard_dims)
+    assert len(leaves) == len(dims), (len(leaves), len(dims))
+    local = sum((_sqsum(x) for x, d in zip(leaves, dims) if d >= 0),
+                jnp.zeros((), jnp.float32))
+    repl = sum((_sqsum(x) for x, d in zip(leaves, dims) if d < 0),
+               jnp.zeros((), jnp.float32))
+    return jnp.sqrt(jax.lax.psum(local, axis_name) + repl)
 
 
-def clip_by_global_norm(tree: PyTree, max_norm: float):
-    norm = global_norm(tree)
+def clip_by_global_norm(tree: PyTree, max_norm: float, *, axis_name=None,
+                        shard_dims: PyTree | None = None):
+    norm = global_norm(tree, axis_name=axis_name, shard_dims=shard_dims)
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
     # multiply in each leaf's own dtype: `g * f32_scalar` would otherwise
     # materialise an fp32 copy of the whole gradient tree.
@@ -116,9 +135,15 @@ class AdamW:
                           jax.tree_util.tree_map(zeros, params),
                           jax.tree_util.tree_map(zeros, params))
 
-    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree, *,
+               axis_name=None, shard_dims: PyTree | None = None
                ) -> tuple[PyTree, AdamWState, dict]:
-        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        """ZeRO-1: with ``axis_name``/``shard_dims`` the inputs are this
+        data shard's slices; AdamW's update is elementwise, so only the
+        clipping norm needs the cross-shard psum correction."""
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm,
+                                           axis_name=axis_name,
+                                           shard_dims=shard_dims)
         step = state.step + 1
         b1, b2 = self.b1, self.b2
         bc1 = 1 - b1 ** step.astype(jnp.float32)
@@ -198,30 +223,49 @@ class Adafactor:
                               jax.tree_util.tree_map(vr, params),
                               jax.tree_util.tree_map(vc, params))
 
-    def update(self, grads, state, params):
+    def update(self, grads, state, params, *, axis_name=None,
+               shard_dims: PyTree | None = None):
+        """ZeRO-1: with ``axis_name``/``shard_dims`` the inputs are this
+        data shard's slices.  Unlike AdamW the factored statistics are
+        not elementwise — any mean that reduces over a sliced dim (the
+        column stats and rms normalizers of a row-sliced 2-D leaf) is
+        pmean-corrected so every shard reproduces the replicated math."""
         if self.max_grad_norm is not None:
-            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm,
+                                               axis_name=axis_name,
+                                               shard_dims=shard_dims)
         else:
             gnorm = jnp.zeros((), jnp.float32)
         step = state.step + 1
         beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
         lr = self._lr(step)
 
-        def upd(p, g, vr, vc):
+        def upd(p, g, vr, vc, shard_dim=-1):
+            # shard_dim >= 0: leaf is a ZeRO slice along that dim (slices
+            # are equal-sized, so pmean-of-means is the global mean)
+            def corr(x, over_dim):
+                if axis_name is not None and shard_dim == over_dim:
+                    return jax.lax.pmean(x, axis_name)
+                return x
             g32 = g.astype(jnp.float32)
             g2 = jnp.square(g32) + self.eps
             if self._factored(p):
-                vr_n = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
-                vc_n = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
-                denom = (vr_n / jnp.maximum(
-                    vr_n.mean(axis=-1, keepdims=True), self.eps))[..., None] \
+                vr_n = beta2 * vr + (1 - beta2) * corr(
+                    g2.mean(axis=-1), p.ndim - 1)
+                vc_n = beta2 * vc + (1 - beta2) * corr(
+                    g2.mean(axis=-2), p.ndim - 2)
+                rbar = corr(vr_n.mean(axis=-1, keepdims=True), p.ndim - 2)
+                denom = (vr_n / jnp.maximum(rbar, self.eps))[..., None] \
                     * vc_n[..., None, :]
                 u = g32 * jax.lax.rsqrt(denom + self.eps)
             else:
                 vr_n = beta2 * vr + (1 - beta2) * g2
                 vc_n = vc
                 u = g32 * jax.lax.rsqrt(vr_n + self.eps)
-            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            msq = jnp.mean(jnp.square(u))
+            if axis_name is not None and shard_dim >= 0:
+                msq = jax.lax.pmean(msq, axis_name)
+            rms_u = jnp.sqrt(msq + 1e-12)
             u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
             new_p = (p.astype(jnp.float32) - lr *
                      (u + self.weight_decay * p.astype(jnp.float32)))
@@ -229,9 +273,13 @@ class Adafactor:
 
         # chunked update keeps fp32 working copies to one layer slice;
         # NB the rms_u clip then applies per leading-dim slice (documented).
+        # ZeRO slices skip chunking (they are 1/n_shards-sized already).
+        dims = (shard_dims if shard_dims is not None
+                else jax.tree_util.tree_map(lambda p: -1, params))
         out = jax.tree_util.tree_map(
-            lambda *ls: _maybe_chunked(upd, *ls),
-            params, grads, state.vr, state.vc)
+            lambda p, g, vr, vc, d: (upd(p, g, vr, vc, d) if d >= 0
+                                     else _maybe_chunked(upd, p, g, vr, vc)),
+            params, grads, state.vr, state.vc, dims)
         pick = lambda i: jax.tree_util.tree_map(
             lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
         return (pick(0), AdafactorState(step, pick(1), pick(2)),

@@ -105,16 +105,24 @@ def make_train_step(model, cfg: ArchConfig, optimizer, *,
                     n_microbatches: int = 1,
                     grad_compression=None,
                     param_axes=None,
-                    mesh=None) -> Callable:
+                    mesh=None,
+                    plan=None,
+                    zero1: bool = False) -> Callable:
     """Build the train step.
 
-    With ``mesh`` the returned step is pjit'd for data parallelism: every
+    With ``mesh`` (or a ``repro.distributed.partition.MeshPlan`` via
+    ``plan``) the returned step is pjit'd for GSPMD partitioning: every
     batch leaf's leading dim is constrained over the mesh's data axes
     (GSPMD then partitions the loss and inserts the cross-replica gradient
-    psum where sharded activations meet replicated/FSDP params), and the
-    body is traced under ``kernels.dispatch.data_parallel`` so kernel
-    eligibility budgets VMEM from per-shard — not global — batch shapes.
-    Without ``mesh`` the step is returned un-jitted, as before.
+    psum where sharded activations meet replicated/FSDP params), the body
+    is traced under the plan's ``dispatch_context()`` so kernel
+    eligibility budgets VMEM from per-shard — not global — batch shapes
+    (rows / data shards, feature widths / model shards), and the rule
+    tables are active (``use_sharding``) so grad/param constraints
+    resolve.  ``zero1=True`` additionally constrains the optimizer state
+    through the optimizer's ``state_axes`` — moments of "embed"-sharded
+    params land "data"-sharded (ZeRO-1) and GSPMD gathers params only for
+    the update.  Without a mesh the step is returned un-jitted, as before.
     """
     loss_fn = make_loss_fn(model, cfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -166,15 +174,18 @@ def make_train_step(model, cfg: ArchConfig, optimizer, *,
         metrics.update(opt_metrics)
         return params, opt_state, metrics
 
-    if mesh is None:
+    if mesh is None and plan is None:
         return train_step
 
     from jax.sharding import NamedSharding
-    from repro.distributed.graph_sharding import data_spec
-    from repro.distributed.sharding import data_parallel_size
-    from repro.kernels import dispatch as kernel_dispatch
-    dp_size = data_parallel_size(mesh)
-    batch_spec = data_spec(mesh)
+    from repro.distributed import partition
+    from repro.distributed.sharding import constrain_tree, use_sharding
+    if plan is None:
+        plan = partition.plan_for(mesh)
+    mesh = plan.mesh
+    dp_size = plan.data_size
+    batch_spec = plan.data_spec()
+    state_axes = optimizer.state_axes(param_axes) if zero1 else None
 
     def constrain_batch(batch):
         def c(x):
@@ -185,14 +196,27 @@ def make_train_step(model, cfg: ArchConfig, optimizer, *,
         return jax.tree_util.tree_map(c, batch)
 
     def dp_step(params, opt_state, batch):
-        with kernel_dispatch.data_parallel(dp_size):
-            return train_step(params, opt_state, constrain_batch(batch))
+        with use_sharding(mesh, plan.param_rules, plan.act_rules), \
+                plan.dispatch_context():
+            if state_axes is not None:
+                # ZeRO-1: keep the optimizer state "data"-sharded on both
+                # sides of the update; GSPMD then gathers params only for
+                # the update itself
+                opt_state = constrain_tree(opt_state, state_axes,
+                                           kind="param")
+            params, opt_state, metrics = train_step(
+                params, opt_state, constrain_batch(batch))
+            if state_axes is not None:
+                opt_state = constrain_tree(opt_state, state_axes,
+                                           kind="param")
+            return params, opt_state, metrics
 
-    # donate replicated state: see graph_sharding.make_dp_train_step
+    # donate replicated state: see partition.make_train_step
     return jax.jit(dp_step, donate_argnums=(0, 1))
 
 
-def device_prefetch(batches, place: Callable, *, depth: int = 2):
+def device_prefetch(batches, place: Callable | None = None, *,
+                    plan=None, depth: int = 2):
     """Double-buffered host->device transfer.
 
     Wraps a host batch iterator so that ``place`` (device_put / sharded
@@ -204,8 +228,18 @@ def device_prefetch(batches, place: Callable, *, depth: int = 2):
     2 = classic double buffering.  Exceptions in `batches`/`place` re-raise
     at the consumer and early close joins the thread (repro.data.pipeline
     prefetch semantics).
+
+    Placement must match the train step's in_specs or the first step pays
+    a resharding copy: pass a ``repro.distributed.partition.MeshPlan`` as
+    ``plan`` (place defaults to ``plan.put_super_batch``, the correct 2-D
+    sharding — groups over "data", feature dims over "model") or a
+    ``place`` built from the same plan.
     """
     from repro.data.pipeline import prefetch
+    if place is None:
+        if plan is None:
+            raise ValueError("device_prefetch needs place= or plan=")
+        place = plan.put_super_batch
     return prefetch((place(*b) for b in batches), depth=depth)
 
 

@@ -283,7 +283,8 @@ def test_dispatch_data_parallel_budgets_per_shard():
 # Loss parity: dp runner path == plain path, and across device counts
 # ---------------------------------------------------------------------------
 
-def _mag_run(num_devices, num_replicas, n_graphs=48, bs=8, steps=3):
+def _mag_run(num_devices, num_replicas, n_graphs=48, bs=8, steps=3,
+             model_parallel=1):
     from repro.core import HIDDEN_STATE, mag_schema
     from repro.core.models import vanilla_mpnn
     from repro.data import (InMemorySampler, SamplingSpecBuilder,
@@ -338,7 +339,7 @@ def _mag_run(num_devices, num_replicas, n_graphs=48, bs=8, steps=3):
     return run(train_batches=gen, model_fn=lambda: (Init(), gnn),
                task=task, epochs=1, learning_rate=1e-2, total_steps=50,
                log_every=10 ** 9, num_devices=num_devices,
-               max_steps=steps)
+               model_parallel=model_parallel, max_steps=steps)
 
 
 def test_dp_runner_matches_plain_runner():

@@ -213,6 +213,68 @@ def test_rebalance_on_worker_killed_mid_epoch(problem):
             assert_graphs_equal(g, w)
 
 
+def test_respawn_restores_fleet_width(problem):
+    """Coordinator-driven respawn: kill a worker mid-epoch; the stream is
+    unchanged AND the fleet returns to full width (a fresh process under
+    the dead worker's id), with the replacement delivering batches in the
+    next epoch instead of survivors absorbing its steps forever.
+
+    The death is detected either by the client's blocked read (mid-epoch
+    rebalance) or, when the worker flushed its whole stripe before dying,
+    by the next epoch's assign-time sweep — so the full-width assertions
+    are made after epoch 1 starts, where both paths have converged."""
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 8, sizes, seed=0, num_replicas=1)
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=2, num_replicas=1, seed=0,
+                         respawn=True) as svc:
+        got = []
+        for i, g in enumerate(svc.epoch(0)):
+            got.append(g)
+            if i == 1:
+                svc.kill_worker(0)
+        want = list(batcher.epoch(0))
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            assert_graphs_equal(g, w)
+        # epoch 1: the replacement serves its stripe (stream still exact)
+        got1 = list(svc.epoch(1))
+        want1 = list(batcher.epoch(1))
+        assert len(got1) == len(want1)
+        for g, w in zip(got1, want1):
+            assert_graphs_equal(g, w)
+        # back to full width: both worker ids alive with live processes,
+        # exactly one retired handle (the killed original), and the
+        # replacement's watermark advanced through epoch 1
+        alive = svc.coordinator.alive()
+        assert len(alive) == 2
+        assert all(w.process_alive() for w in alive)
+        assert len(svc.coordinator.retired) == 1
+        marks = svc.watermarks()
+        assert marks[0] is not None and marks[0][0] == 1, marks
+
+
+def test_respawn_disabled_keeps_legacy_absorb(problem):
+    """Without respawn=True the PR-3 contract is unchanged: survivors
+    absorb the dead worker's steps and the fleet stays narrow (the
+    assign-time sweep marks the death at the latest by epoch 1)."""
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 8, sizes, seed=0, num_replicas=1)
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=2, num_replicas=1, seed=0) as svc:
+        for i, _ in enumerate(svc.epoch(0)):
+            if i == 1:
+                svc.kill_worker(0)
+        got1 = list(svc.epoch(1))  # survivor absorbs the whole epoch
+        want1 = list(batcher.epoch(1))
+        assert len(got1) == len(want1)
+        for g, w in zip(got1, want1):
+            assert_graphs_equal(g, w)
+        assert len(svc.coordinator.alive()) == 1
+        assert not svc.coordinator.workers[0].alive
+        assert svc.coordinator.retired == []  # nothing replaced
+
+
 def test_dead_fleet_raises(problem):
     from repro.sampling_service import DeadFleetError
     store, spec, roots, graphs, sizes = problem
