@@ -6,6 +6,10 @@
 #   make ci            — what the CI test matrix runs: both of the above
 #   make smoke         — end-to-end example drivers (quickstart + the
 #                        OGBN-MAG trainer sharded over 8 forced CPU devices)
+#   make smoke-multihost — 2-process jax.distributed OGBN-MAG run (4 CPU
+#                        devices per process) with sampler batches over
+#                        TCP; per-rank logs land in MULTIHOST_LOG_DIR
+#                        (CI uploads them as artifacts)
 #   make bench         — the benchmark sections that write BENCH_*.json
 #   make check-bench   — snapshot committed baselines, re-run bench, fail
 #                        on >25% us_per_call regression or gate violation
@@ -14,8 +18,10 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_BASELINE := $(or $(TMPDIR),/tmp)/repro_bench_baseline
+MULTIHOST_LOG_DIR ?= results/multihost_logs
 
-.PHONY: test test-kernels ci smoke bench check-bench bench-dispatch
+.PHONY: test test-kernels ci smoke smoke-multihost bench check-bench \
+    bench-dispatch
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -39,11 +45,17 @@ smoke:
 	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
 	    --papers 320 --sampler service
 
+smoke-multihost:
+	$(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
+	    --multihost 2 --papers 320 \
+	    --multihost-log-dir $(MULTIHOST_LOG_DIR)
+
 bench:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch
 	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only mp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only sampler_service
+	$(PYTHON) -m benchmarks.run --quick --only multihost
 
 check-bench:
 	rm -rf $(BENCH_BASELINE)
@@ -57,7 +69,8 @@ check-bench:
 	    --require BENCH_sampler_service.json \
 	    --require BENCH_dp_scaling.json \
 	    --require BENCH_mp_scaling.json \
-	    --require BENCH_segment_pool_dispatch.json
+	    --require BENCH_segment_pool_dispatch.json \
+	    --require BENCH_multihost.json
 
 bench-dispatch:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch

@@ -57,6 +57,12 @@ class GraphBatcher:
         self.num_replicas = num_replicas
         self.per_group = self.plan.per_group
 
+    @property
+    def num_steps(self) -> int:
+        """Steps per epoch — the shared batch-source contract
+        (`SamplingService` and `RemoteStreamClient` expose the same)."""
+        return self.plan.num_steps(len(self.graphs))
+
     def epoch(self, epoch: int, *, start_step: int = 0
               ) -> Iterator[GraphTensor]:
         """Deterministic epoch stream; `start_step` skips ahead (restart)."""

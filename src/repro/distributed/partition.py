@@ -84,10 +84,56 @@ def _shard_map_norep(f, mesh, in_specs, out_specs):
 # Mesh construction
 # ---------------------------------------------------------------------------
 
+def initialize_distributed(coordinator_address: Optional[str] = None,
+                           num_processes: Optional[int] = None,
+                           process_id: Optional[int] = None) -> bool:
+    """Join a multi-process (multi-host) jax job.
+
+    Reads explicit args or the ``REPRO_COORDINATOR`` /
+    ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID`` environment (the
+    contract the ``examples/ogbn_mag_train.py --multihost`` launcher
+    exports to its children).  Must run before the first computation /
+    device query, like `jax.distributed.initialize` itself.  Returns
+    True when a multi-process runtime was initialized, False when
+    unconfigured or world size is 1 (single-process runs need nothing).
+
+    After this, `jax.devices()` is the GLOBAL device list, `make_mesh`
+    builds a global mesh, and every `MeshPlan` placement routes host
+    data through the process-local assembly path
+    (`jax.make_array_from_process_local_data` for per-rank batches,
+    callback-based placement for host-replicated state).
+    """
+    import os
+    coord = coordinator_address or os.environ.get("REPRO_COORDINATOR", "")
+    nproc = int(num_processes if num_processes is not None
+                else os.environ.get("REPRO_NUM_PROCESSES", "0") or 0)
+    pid = int(process_id if process_id is not None
+              else os.environ.get("REPRO_PROCESS_ID", "0") or 0)
+    if not coord or nproc <= 1:
+        return False
+    try:
+        # CPU cross-process collectives (the CI / test backend) need the
+        # gloo implementation; harmless no-op where already configured
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # noqa: BLE001 — flag renamed/absent on this jax
+        pass
+    jax.distributed.initialize(coordinator_address=coord,
+                               num_processes=nproc, process_id=pid)
+    return True
+
+
 def make_mesh(num_devices: Optional[int] = None, *,
               model_parallel: int = 1) -> Mesh:
     """A ("data",) mesh, or a 2-D ("data", "model") mesh when
-    ``model_parallel > 1`` (data rows x model columns)."""
+    ``model_parallel > 1`` (data rows x model columns).
+
+    Under `jax.distributed` the mesh is GLOBAL: `jax.devices()` is
+    process-major (every process's local devices are one contiguous
+    block), so the "data" axis tiles processes in rank order — global
+    component group ``g`` lands on the same global data row as in a
+    single-process run of the same mesh size, which is what makes the
+    multi-process loss bit-compatible.  Model columns must stay inside
+    one process (feature chunks of one group never cross hosts)."""
     devices = jax.devices()
     n = num_devices or len(devices)
     if len(devices) < n:
@@ -98,6 +144,17 @@ def make_mesh(num_devices: Optional[int] = None, *,
     if n % mp:
         raise ValueError(f"model_parallel {mp} must divide the device "
                          f"count {n}")
+    if jax.process_count() > 1:
+        if n != len(devices):
+            raise ValueError(
+                f"multi-process meshes must span every global device "
+                f"(asked for {n} of {len(devices)}): each process has to "
+                "contribute its addressable shard")
+        if jax.local_device_count() % mp:
+            raise ValueError(
+                f"model_parallel {mp} must divide the "
+                f"{jax.local_device_count()} local devices — model "
+                "columns cannot cross process boundaries")
     devs = np.asarray(devices[:n])
     if mp == 1:
         return Mesh(devs, ("data",))
@@ -176,6 +233,88 @@ class MeshPlan:
     def num_devices(self) -> int:
         return self.mesh.devices.size
 
+    # -- multi-process (jax.distributed) bookkeeping -------------------------
+
+    @property
+    def is_multiprocess(self) -> bool:
+        """True when the mesh spans devices this process cannot address
+        (a `jax.distributed` global mesh) — every host->device placement
+        then assembles global arrays from process-local data instead of
+        `device_put`."""
+        me = jax.process_index()
+        return any(d.process_index != me for d in self.mesh.devices.flat)
+
+    @property
+    def process_count(self) -> int:
+        """Processes contributing devices to this mesh (1 == all local)."""
+        return len({d.process_index for d in self.mesh.devices.flat})
+
+    @property
+    def local_data_size(self) -> int:
+        """Data shards whose devices THIS process owns — the divisor for
+        a process-local super-batch's group count.  Single-process: the
+        full data size."""
+        if not self.is_multiprocess:
+            return self.data_size
+        if self.data_size % self.process_count:
+            raise ValueError(
+                f"data size {self.data_size} not divisible by the "
+                f"{self.process_count} participating processes")
+        return self.data_size // self.process_count
+
+    def _host_put(self, x, spec):
+        """Host value (identical on every process) -> placed array.
+        Single-process: `device_put`.  Multi-process: assemble the global
+        array from a callback that serves each addressable device its
+        slice of the full host value (works for replicated params AND
+        data-sharded ZeRO-1 optimizer state — `opt.init` runs identically
+        on every process, so the full value is available everywhere)."""
+        sharding = NamedSharding(self.mesh, spec)
+        if not self.is_multiprocess:
+            return jax.device_put(x, sharding)
+        x = np.asarray(x)
+        return jax.make_array_from_callback(x.shape, sharding,
+                                            lambda idx: x[idx])
+
+    def _scaled_graph_specs(self, graph):
+        """Specs for a multi-process super-batch, resolved against GLOBAL
+        leaf shapes (local leading group dim x process_count): the
+        divisibility fixup must see the global batch, or it would
+        'helpfully' replicate every leaf whose local group count the
+        global data size does not divide."""
+        pc = self.process_count
+        leaves, treedef = jax.tree_util.tree_flatten(graph)
+        key = (self.mesh, tuple(self.act_rules.items()), treedef, pc,
+               tuple(x.shape for x in leaves))
+        cached = _SPEC_CACHE.get(key)
+        if cached is not None:
+            return cached
+        ctx = self._ctx()
+        out = jax.tree_util.tree_unflatten(treedef, [
+            ctx.resolve(_leaf_axes(x), ctx.act_rules,
+                        shape=(x.shape[0] * pc,) + tuple(x.shape[1:]))
+            for x in leaves])
+        _SPEC_CACHE[key] = out
+        return out
+
+    def _put_local(self, x, spec):
+        """Process-local batch data -> global array.  The leading group
+        axis is the only process-spanning dim of a super-batch leaf, so
+        the global shape is the local one scaled by process_count there
+        (feature/model dims stay process-local by `make_mesh`'s
+        construction)."""
+        sharding = NamedSharding(self.mesh, spec)
+        x = np.asarray(x)
+        ents = tuple(spec)
+        lead = ents[0] if ents else None
+        lead = lead if isinstance(lead, (tuple, list)) else (lead,)
+        scale = self.process_count \
+            if any(a in self.data_axes for a in lead if a) else 1
+        global_shape = (x.shape[0] * scale,) + tuple(x.shape[1:]) \
+            if x.ndim else x.shape
+        return jax.make_array_from_process_local_data(sharding, x,
+                                                      global_shape)
+
     def _ctx(self) -> ShardingContext:
         return ShardingContext(self.mesh, self.param_rules, self.act_rules)
 
@@ -251,25 +390,41 @@ class MeshPlan:
     def put_super_batch(self, graph, labels):
         """Place a host-side super-batch and its per-group labels with the
         plan's 2-D shardings.  A scalar GraphTensor is promoted to a
-        [1, ...] stack so the 1-device path runs the identical program."""
+        [1, ...] stack so the 1-device path runs the identical program.
+
+        Multi-process meshes treat `graph`/`labels` as THIS PROCESS's
+        shard of the global batch (the `GraphBatcher(rank, world)`
+        stream): leaves become global `jax.Array`s via
+        `make_array_from_process_local_data`, stacking the per-process
+        group blocks in process-rank order — exactly the global
+        super-batch a single-process `GraphBatcher` would emit."""
         from repro.core.graph_tensor import stack_graphs, stack_size
         if stack_size(graph) is None:
             graph = stack_graphs([graph])
             labels = np.asarray(labels)[None]
         n_groups = stack_size(graph)
-        if n_groups % self.data_size:
+        if n_groups % self.local_data_size:
             raise ValueError(
                 f"super-batch has {n_groups} component groups, not "
-                f"divisible by the mesh's {self.data_size} data shards")
-        graph = jax.tree_util.tree_map(jax.device_put, graph,
-                                       self.graph_shardings(graph))
-        labels = jax.device_put(jnp.asarray(labels),
-                                NamedSharding(self.mesh, self.data_spec()))
+                f"divisible by this process's {self.local_data_size} "
+                "data shards")
+        if not self.is_multiprocess:
+            graph = jax.tree_util.tree_map(jax.device_put, graph,
+                                           self.graph_shardings(graph))
+            labels = jax.device_put(
+                jnp.asarray(labels),
+                NamedSharding(self.mesh, self.data_spec()))
+            return graph, labels
+        specs = self._scaled_graph_specs(graph)
+        graph = jax.tree_util.tree_map(self._put_local, graph, specs)
+        labels = self._put_local(np.asarray(labels), self.data_spec())
         return graph, labels
 
     def replicate(self, tree):
-        """device_put a pytree fully replicated over the mesh."""
-        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+        """Place a pytree fully replicated over the (possibly
+        multi-process) mesh."""
+        return jax.tree_util.tree_map(
+            lambda x: self._host_put(x, P()), tree)
 
     # -- ZeRO-1 optimizer-state layout ---------------------------------------
 
@@ -332,13 +487,14 @@ class MeshPlan:
 
     def place_opt_state(self, optimizer, params, opt_state,
                         param_axes=None):
-        """device_put the optimizer state with its ZeRO-1 shardings (the
-        placement `make_train_step`'s in_specs expect)."""
+        """Place the optimizer state with its ZeRO-1 shardings (the
+        placement `make_train_step`'s in_specs expect).  Works on
+        multi-process meshes too: `opt.init` runs identically on every
+        process, so each host serves its devices' slices of the full
+        state."""
         specs = self.opt_state_specs(optimizer, params, opt_state,
                                      param_axes)
-        return jax.tree_util.tree_map(
-            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
-            opt_state, specs)
+        return jax.tree_util.tree_map(self._host_put, opt_state, specs)
 
     def opt_state_bytes_per_device(self, opt_state) -> int:
         """Bytes of optimizer state resident on one device (the ZeRO-1

@@ -172,6 +172,19 @@ def run(*, train_batches: Optional[Callable[[int],
     pre-sharded).  Loss equals the 1-device run on the same seed
     (component groups are weighted equally, so the mean-of-group-means is
     the global mean; feature chunks recompose exactly).
+
+    Under `jax.distributed` (``partition.initialize_distributed`` ran and
+    `jax.process_count() > 1`) the same call trains multi-host:
+    ``num_devices`` is the GLOBAL device count, ``train_batches`` (or the
+    service stream) must yield THIS PROCESS's rank shard of each step
+    (``GraphBatcher(rank, world)`` composing with ``num_replicas`` local
+    groups — or a `RemoteStreamClient` subscribed with its rank), and
+    `put_super_batch` assembles global arrays from the per-process
+    shards.  Loss/metrics are pmean/psum results replicated across
+    processes; only process 0 logs.  Checkpointing (``ckpt_dir``) is not
+    yet supported multi-process (ZeRO-1 optimizer shards are not
+    host-addressable from one process) and raises up front.  See
+    ``examples/ogbn_mag_train.py --multihost``.
     """
     if sampler == "service":
         if service is None or label_fn is None:
@@ -237,6 +250,21 @@ def run(*, train_batches: Optional[Callable[[int],
                                    model_parallel=model_parallel)
     elif model_parallel > 1:
         raise ValueError("model_parallel > 1 needs num_devices=")
+    elif jax.process_count() > 1:
+        raise ValueError(
+            "multi-process (jax.distributed) training needs num_devices= "
+            "— the per-process jit path cannot see the global mesh")
+    # one process narrates / checkpoints for the whole job; the others
+    # compute the same replicated results and stay quiet
+    is_main = jax.process_index() == 0
+    if ckpt_dir and jax.process_count() > 1:
+        # fail fast, not at step save_interval: save_async materializes
+        # the full state host-side, and ZeRO-1 optimizer shards live on
+        # other processes' devices (non-addressable here)
+        raise ValueError(
+            "checkpointing (ckpt_dir=) is not yet supported under "
+            "multi-process jax.distributed — optimizer state is sharded "
+            "across processes; run with ckpt_dir=''")
 
     def place(graph, labels):
         """Host batch -> device batch (the plan's 2-D sharding in mesh
@@ -279,12 +307,12 @@ def run(*, train_batches: Optional[Callable[[int],
                                                      graph, labels)
             step += 1
             last_loss = float(loss)
-            if step % log_every == 0:
+            if step % log_every == 0 and is_main:
                 print(f"epoch {epoch} step {step} loss {last_loss:.4f} "
                       f"({log_every / (time.time() - t0):.1f} it/s)",
                       flush=True)
                 t0 = time.time()
-            if mgr is not None and mgr.should_save(step):
+            if mgr is not None and is_main and mgr.should_save(step):
                 mgr.save_async(step, (params, opt_state))
 
     metrics = {}
@@ -302,7 +330,7 @@ def run(*, train_batches: Optional[Callable[[int],
             correct += float(c)
             total += float(n)
         metrics["eval_accuracy"] = correct / max(total, 1.0)
-    if mgr is not None:
+    if mgr is not None and is_main:
         mgr.save_async(step, (params, opt_state))
         mgr.wait()
     metrics["params"] = params

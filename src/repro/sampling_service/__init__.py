@@ -1,9 +1,15 @@
 """Async graph sampling service: a sampler fleet streaming padded
-super-batches to the training mesh (paper §6.1.1's sampling-as-a-service,
-scaled to one host's process fleet; README.md has the wire format and the
-ownership/backpressure contract)."""
+super-batches to the training mesh (paper §6.1.1's sampling-as-a-service;
+README.md has the wire format and the ownership/backpressure contract).
+Single host: `SamplingService` over an `InProcessTransport`.  Multi-host:
+the same fleet behind a `SamplerEndpoint`, with each trainer rank reading
+its stream through a `RemoteStreamClient` over `TcpTransport`."""
 from repro.sampling_service.client import StreamClient  # noqa: F401
 from repro.sampling_service.coordinator import (Coordinator,  # noqa: F401
                                                 DeadFleetError, WorkerHandle)
+from repro.sampling_service.remote import (RemoteStreamClient,  # noqa: F401
+                                           SamplerEndpoint)
 from repro.sampling_service.service import SamplingService  # noqa: F401
+from repro.sampling_service.transport import (InProcessTransport,  # noqa: F401
+                                              TcpTransport, Transport)
 from repro.sampling_service.worker import SamplerWorker  # noqa: F401

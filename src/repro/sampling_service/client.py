@@ -33,6 +33,7 @@ class StreamClient:
         self.plan = plan
         self.n_items = n_items
         self.poll_interval = poll_interval
+        self._closed = False
 
     @property
     def num_steps(self) -> int:
@@ -42,6 +43,8 @@ class StreamClient:
               ) -> Iterator[GraphTensor]:
         """Deterministic epoch stream; `start_step` skips ahead (restart),
         matching ``GraphBatcher.epoch``."""
+        if self._closed:
+            raise RuntimeError("StreamClient is closed")
         steps = list(range(start_step, self.num_steps))
         self.coordinator.assign_epoch(epoch, steps)
         buffer: dict[int, GraphTensor] = {}
@@ -53,11 +56,29 @@ class StreamClient:
             delivered.add(step)
             yield buffer.pop(step)
 
+    def close(self) -> None:
+        """Idempotent shutdown: stop reading and close every worker
+        socket so a blocked `recv` (or a worker blocked in `sendall`)
+        unblocks immediately.  The client owns no reader threads — reads
+        happen inline in `epoch` with a bounded `poll_interval` timeout —
+        so pytest teardown / interpreter exit can never block on a dead
+        coordinator: any in-flight `_pump` wakes within `poll_interval`
+        and the next `epoch` call raises instead of hanging.  (The
+        remote, TCP-facing client does own a reader thread and joins it
+        with a timeout — see `RemoteStreamClient.close`.)"""
+        if self._closed:
+            return
+        self._closed = True
+        for w in self.coordinator.workers.values():
+            w.close()
+
     # -- receive loop --------------------------------------------------------
 
     def _pump(self, epoch: int, w: WorkerHandle, buffer: dict,
               delivered: set) -> None:
         """Read one frame from `w`, or handle its death."""
+        if self._closed:
+            raise RuntimeError("StreamClient closed mid-epoch")
         try:
             kind, meta, graph = wire.recv_frame(w.sock,
                                                 timeout=self.poll_interval)

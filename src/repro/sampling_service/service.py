@@ -24,9 +24,12 @@ instead of survivors permanently absorbing its share of the stream.
 """
 from __future__ import annotations
 
+import atexit
 import multiprocessing as mp
+import os
 import threading
 import warnings
+import weakref
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
@@ -35,10 +38,66 @@ from repro.core.graph_tensor import GraphTensor
 from repro.data.batching import SizeConstraints
 from repro.data.grouping import BatchPlan
 from repro.data.sampling import GraphStore, SamplingSpec
-from repro.sampling_service import wire
 from repro.sampling_service.client import StreamClient
 from repro.sampling_service.coordinator import Coordinator, WorkerHandle
+from repro.sampling_service.transport import InProcessTransport, Transport
 from repro.sampling_service.worker import worker_main
+
+# Fleets still alive at interpreter exit get a bounded close() BEFORE
+# multiprocessing's own atexit hook runs — that hook join()s children
+# with NO timeout, so one wedged worker would hang exit forever (the
+# exact pytest-teardown failure mode the multi-host test suite pins).
+# atexit runs handlers LIFO: this one registers after multiprocessing's
+# (imported above), so it runs first.
+#
+# Belt AND suspenders: `_SPAWNED` records every worker process this
+# process ever forked, independent of coordinator handle bookkeeping —
+# a worker can survive SIGTERM (observed: a child forked off a
+# signal-masked thread swallows it; only SIGKILL is unconditional), so
+# the reaper kills stragglers by registry, not by fleet state.
+_LIVE_FLEETS: "weakref.WeakSet[SamplingService]" = weakref.WeakSet()
+_SPAWNED: list = []  # (owner_pid, mp.Process) for every forked worker
+
+
+def _kill_stragglers(procs, timeout: float = 1.0) -> None:
+    me = os.getpid()
+    for owner, p in procs:
+        if owner != me or not hasattr(p, "kill"):
+            continue  # not ours to reap / thread backend
+        try:
+            if p.is_alive():
+                p.kill()
+            p.join(timeout)
+        except Exception:  # noqa: BLE001 — teardown best-effort
+            pass
+
+
+def _proc_dead(owner: int, p) -> bool:
+    """True when `p` is our child and verifiably gone (prunable)."""
+    if owner != os.getpid():
+        return False  # fork-inherited handle: not ours to test or prune
+    try:
+        return not p.is_alive()
+    except Exception:  # noqa: BLE001 — closed/foreign handles stay listed
+        return False
+
+
+def _prune_spawn_registry() -> None:
+    """Drop joined workers from the global registry — respawn churn in a
+    long-lived trainer must not grow it without bound."""
+    _SPAWNED[:] = [(o, p) for (o, p) in _SPAWNED if not _proc_dead(o, p)]
+
+
+def _reap_fleets_at_exit() -> None:
+    for svc in list(_LIVE_FLEETS):
+        try:
+            svc.close(timeout=1.0)
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
+    _kill_stragglers(_SPAWNED)
+
+
+atexit.register(_reap_fleets_at_exit)
 
 
 class SamplingService:
@@ -47,7 +106,8 @@ class SamplingService:
                  sizes: SizeConstraints, num_workers: int = 2,
                  num_replicas: Optional[int] = None, seed: int = 0,
                  rank: int = 0, world: int = 1, base_seed: int = 0,
-                 backend: str = "process", respawn: bool = False):
+                 backend: str = "process", respawn: bool = False,
+                 transport: Optional[Transport] = None):
         if num_workers < 1:
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
         self.plan = BatchPlan(batch_size, seed=seed, rank=rank, world=world,
@@ -57,8 +117,15 @@ class SamplingService:
         if backend == "process" and "fork" not in mp.get_all_start_methods():
             backend = "thread"  # no fork (e.g. some non-POSIX hosts)
         self.backend = backend
+        # worker channels come from the Transport (default: socketpair);
+        # TcpTransport runs the identical protocol over loopback TCP —
+        # the single-host half of the multi-host story (the cross-host
+        # half, endpoint + remote clients, is repro.sampling_service.remote)
+        self.transport = transport or InProcessTransport()
         self._worker_args = (store, spec, base_seed)
         self._closed = False
+        self._owner_pid = os.getpid()
+        self._spawned: list = []  # every process ever forked by this fleet
         handles = [self._spawn_worker(wid) for wid in range(num_workers)]
         # respawn=True: a dead worker is replaced in place (the fleet
         # returns to full width) instead of survivors absorbing its steps
@@ -66,10 +133,17 @@ class SamplingService:
             handles, respawn_fn=self._respawn_worker if respawn else None)
         self.client = StreamClient(self.coordinator, self.plan,
                                    len(self.seeds))
+        _LIVE_FLEETS.add(self)
 
     def _spawn_worker(self, wid: int) -> WorkerHandle:
         store, spec, base_seed = self._worker_args
-        trainer_sock, worker_sock = wire.socket_pair()
+        # opportunistic registry pruning keeps both lists bounded by the
+        # number of currently-live workers under respawn churn
+        _prune_spawn_registry()
+        me = os.getpid()
+        self._spawned = [p for p in self._spawned
+                         if not _proc_dead(me, p)]
+        trainer_sock, worker_sock = self.transport.pair()
         args = (wid, worker_sock, store, spec, self.seeds, self.plan,
                 self.sizes, base_seed)
         if self.backend == "process":
@@ -93,6 +167,8 @@ class SamplingService:
             proc.start()
         else:
             raise ValueError(f"unknown backend {self.backend!r}")
+        _SPAWNED.append((os.getpid(), proc))
+        self._spawned.append(proc)
         return WorkerHandle(wid, trainer_sock, process=proc)
 
     def _respawn_worker(self, wid: int) -> Optional[WorkerHandle]:
@@ -124,8 +200,15 @@ class SamplingService:
     def close(self, timeout: float = 5.0) -> None:
         if self._closed:
             return
+        if os.getpid() != self._owner_pid:
+            # a fork child inherited this handle (sampler workers fork
+            # while sibling fleets exist): only the owning process may
+            # close — a child sending STOP over inherited trainer-end
+            # sockets would corrupt the live protocol
+            return
         self._closed = True
         self.coordinator.stop_all()
+        self.client.close()  # then close sockets: unblocks stuck peers
         handles = (list(self.coordinator.workers.values())
                    + list(self.coordinator.retired))
         # closing the trainer ends unblocks any worker mid-sendall (EPIPE)
@@ -139,6 +222,21 @@ class SamplingService:
             if hasattr(p, "terminate") and p.is_alive():
                 p.terminate()
                 p.join(timeout)
+            if hasattr(p, "kill") and p.is_alive():
+                # SIGKILL escalation: a worker that survived EOF + STOP +
+                # SIGTERM (e.g. wedged on a lock inherited mid-fork, or
+                # blocked on an fd a sibling fork still holds open) must
+                # not be able to stall trainer shutdown — or interpreter
+                # exit, where multiprocessing's atexit join()s children
+                # WITHOUT a timeout
+                p.kill()
+                p.join(timeout)
+        # registry sweep: every process this fleet EVER forked, even one
+        # whose coordinator handle was lost (respawn races, spawn errors)
+        _kill_stragglers([(self._owner_pid, p) for p in self._spawned],
+                         timeout)
+        self._spawned = []
+        _prune_spawn_registry()
 
     def __enter__(self) -> "SamplingService":
         return self

@@ -52,10 +52,23 @@ DONE = "done"            # meta: {worker, epoch, step} — assignment drained
 ASSIGN = "assign"        # meta: {epoch, steps: [...], start? } -> worker
 STOP = "stop"            # -> worker: drain and exit
 ERROR = "error"          # meta: {worker, error} — worker-side exception
+# multi-host stream kinds (repro.sampling_service.remote)
+HELLO = "hello"          # client -> endpoint: {rank, epoch, start} — open /
+                         # resume one rank's epoch stream from a watermark
+META = "meta"            # endpoint -> client: {epoch, num_steps} — HELLO ack
+HEARTBEAT = "heartbeat"  # endpoint -> client keepalive: {} — dead-peer
+                         # detection (a client that sees neither frames nor
+                         # heartbeats for its timeout declares the peer dead)
 
 
 class WireError(ConnectionError):
     """Framing violation (bad magic / oversized frame / truncated read)."""
+
+
+# The protocol-level name for a desynced/corrupt stream; `WireError` is
+# kept as the historical alias (they are the same class — a framing
+# violation IS a protocol error, and both are fatal for that connection).
+ProtocolError = WireError
 
 
 def pack_arrays(arrays: dict[str, np.ndarray]) -> bytes:
@@ -121,10 +134,16 @@ def decode_payload(payload: bytes) -> GraphTensor:
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    """Read exactly n bytes; EOFError on clean close, WireError mid-frame."""
+    """Read exactly n bytes; EOFError on clean close, WireError mid-frame
+    (including a peer that stalls past the socket's timeout — a partial
+    frame must never hang the reader)."""
     chunks, got = [], 0
     while got < n:
-        chunk = sock.recv(min(n - got, 1 << 20))
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except socket.timeout as exc:
+            raise WireError(
+                f"peer stalled mid-frame ({got}/{n} bytes)") from exc
         if not chunk:
             if got == 0:
                 raise EOFError("stream closed")
@@ -140,14 +159,22 @@ def send_frame(sock: socket.socket, kind: str, meta: Optional[dict] = None,
 
 
 def recv_frame(sock: socket.socket,
-               timeout: Optional[float] = None
+               timeout: Optional[float] = None,
+               frame_timeout: Optional[float] = None
                ) -> tuple[str, dict, Optional[GraphTensor]]:
     """Blocking read of one frame.  ``timeout`` (seconds) is applied to a
     non-consuming 1-byte MSG_PEEK, so socket.timeout NEVER discards
     partial data (a consuming timed read could drop 1-3 magic bytes and
     desync the stream — fatal once this framing runs over TCP); once any
     byte is available we read the frame to completion (frames are written
-    with a single sendall, so the remainder is in flight)."""
+    with a single sendall, so the remainder is in flight).
+
+    ``frame_timeout`` bounds the frame-body reads themselves: a peer that
+    goes silent MID-frame (live process, wedged stream — the case the
+    peek timeout cannot see) raises `WireError` instead of hanging the
+    reader forever.  That error is fatal for the connection (the partial
+    frame cannot be resumed), which is exactly how the remote client
+    treats it: drop the connection, reconnect, resume from watermark."""
     if timeout is not None:
         sock.settimeout(timeout)
         try:
@@ -155,6 +182,17 @@ def recv_frame(sock: socket.socket,
                 raise EOFError("stream closed")
         finally:
             sock.settimeout(None)
+    if frame_timeout is not None:
+        sock.settimeout(frame_timeout)
+    try:
+        return _recv_frame_body(sock)
+    finally:
+        if frame_timeout is not None:
+            sock.settimeout(None)
+
+
+def _recv_frame_body(sock: socket.socket
+                     ) -> tuple[str, dict, Optional[GraphTensor]]:
     magic = _recv_exact(sock, len(MAGIC))
     if magic != MAGIC:
         raise WireError(f"bad frame magic {magic!r}")

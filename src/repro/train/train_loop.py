@@ -233,7 +233,11 @@ def device_prefetch(batches, place: Callable | None = None, *,
     a resharding copy: pass a ``repro.distributed.partition.MeshPlan`` as
     ``plan`` (place defaults to ``plan.put_super_batch``, the correct 2-D
     sharding — groups over "data", feature dims over "model") or a
-    ``place`` built from the same plan.
+    ``place`` built from the same plan.  On a multi-process mesh the same
+    wrapper overlaps the per-process global-array assembly
+    (`make_array_from_process_local_data`) — and, with a
+    `RemoteStreamClient` source, the TCP receive + wire decode — with the
+    previous step.
     """
     from repro.data.pipeline import prefetch
     if place is None:

@@ -8,6 +8,17 @@ from repro.core.graph_tensor import (Adjacency, Context, EdgeSet,
                                      GraphTensor, NodeSet)
 
 
+def pytest_configure(config):
+    # socket/subprocess tests mark per-test timeouts; the mark is enforced
+    # by pytest-timeout when installed (requirements-test.txt) and stays a
+    # registered no-op without it — every such test also carries its own
+    # structural deadline, so nothing hangs either way.
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test timeout (enforced by pytest-timeout "
+        "when installed; tests carry structural deadlines regardless)")
+
+
 def make_graph(n_users=4, n_items=6, n_purchased=7, n_friend=3, seed=0,
                pad_users=0, pad_items=0, pad_edges=0):
     """The paper's Fig. 2/3 recommender example (+ optional padding)."""

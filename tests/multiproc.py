@@ -1,0 +1,148 @@
+"""Reusable subprocess-fleet harness for cross-process tests.
+
+Multi-host changes are only safely landable with tests that actually
+cross the process boundary — `jax.distributed` ranks, sampler endpoints,
+kill/reconnect chaos — and those tests share three needs this module
+owns:
+
+* **launch**: spawn a fleet of python processes (same script, per-rank
+  env), with the `REPRO_*` environment contract the repo's
+  `--multihost` launcher and `partition.initialize_distributed` speak;
+* **harvest**: wait for every member under ONE wall-clock deadline,
+  kill stragglers (a wedged rank must fail the test, not hang pytest),
+  and capture per-rank logs to files so failures are diagnosable;
+* **ports**: OS-assigned only — `free_port()` for the one address that
+  must be known before a process starts (the jax coordinator), files
+  for everything published after a bind.
+
+Usage::
+
+    results = run_fleet([ [sys.executable, "-c", code] ] * 2,
+                        env_for_rank=jax_fleet_env(world=2,
+                                                   local_devices=2),
+                        timeout=120)
+    assert_fleet_ok(results)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Callable, Optional, Sequence
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def free_port() -> int:
+    """An OS-assigned TCP port, released immediately (the tiny reuse race
+    is acceptable for the jax coordinator, which binds once at launch —
+    everything else in these tests binds port 0 itself and publishes)."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@dataclasses.dataclass
+class ProcResult:
+    rank: int
+    returncode: Optional[int]   # None = killed after timeout
+    log: str
+    log_path: str
+
+    @property
+    def ok(self) -> bool:
+        return self.returncode == 0
+
+    @property
+    def timed_out(self) -> bool:
+        return self.returncode is None
+
+
+def jax_fleet_env(world: int, *, local_devices: int = 1,
+                  coordinator: Optional[str] = None,
+                  extra: Optional[dict] = None
+                  ) -> Callable[[int], dict]:
+    """Per-rank environment for a `jax.distributed` fleet: the REPRO_*
+    contract `partition.initialize_distributed` reads, host-forced local
+    CPU devices, and PYTHONPATH to this repo's src/."""
+    coordinator = coordinator or f"127.0.0.1:{free_port()}"
+
+    def env_for(rank: int) -> dict:
+        env = dict(os.environ,
+                   REPRO_COORDINATOR=coordinator,
+                   REPRO_NUM_PROCESSES=str(world),
+                   REPRO_PROCESS_ID=str(rank),
+                   XLA_FLAGS="--xla_force_host_platform_device_count="
+                             f"{local_devices}",
+                   PYTHONPATH=SRC + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        env.update(extra or {})
+        return env
+
+    return env_for
+
+
+def run_fleet(argvs: Sequence[Sequence[str]], *, timeout: float,
+              env_for_rank: Optional[Callable[[int], dict]] = None,
+              log_dir: Optional[str] = None) -> list[ProcResult]:
+    """Spawn one process per argv, harvest all under a single deadline.
+
+    Every process gets its own ``rank{r}.log`` (stdout+stderr merged) in
+    `log_dir` (default: a fresh temp dir).  Processes still alive at the
+    deadline — or after any peer already failed and the deadline passed —
+    are killed and reported with ``returncode=None``.  Never raises on
+    fleet failure: assert on the results (see `assert_fleet_ok`) so the
+    logs make it into the test report."""
+    log_root = Path(log_dir or tempfile.mkdtemp(prefix="fleet_logs_"))
+    log_root.mkdir(parents=True, exist_ok=True)
+    procs, logs = [], []
+    for rank, argv in enumerate(argvs):
+        path = log_root / f"rank{rank}.log"
+        handle = open(path, "wb")
+        env = env_for_rank(rank) if env_for_rank else None
+        procs.append(subprocess.Popen(list(argv), env=env, stdout=handle,
+                                      stderr=subprocess.STDOUT))
+        logs.append((path, handle))
+    deadline = time.monotonic() + timeout
+    results = []
+    for rank, (p, (path, handle)) in enumerate(zip(procs, logs)):
+        try:
+            code = p.wait(max(deadline - time.monotonic(), 0.1))
+        except subprocess.TimeoutExpired:
+            p.kill()
+            p.wait()
+            code = None
+        handle.close()
+        results.append(ProcResult(rank, code,
+                                  path.read_text(errors="replace"),
+                                  str(path)))
+    for p in procs:  # stragglers behind an early peer failure
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+    return results
+
+
+def assert_fleet_ok(results: Sequence[ProcResult]) -> None:
+    """Fail with every non-OK rank's log tail inlined."""
+    bad = [r for r in results if not r.ok]
+    if not bad:
+        return
+    report = []
+    for r in bad:
+        state = "TIMED OUT" if r.timed_out else f"exit {r.returncode}"
+        report.append(f"--- rank {r.rank} {state} ({r.log_path}) ---\n"
+                      + r.log[-3000:])
+    raise AssertionError(f"{len(bad)}/{len(results)} fleet member(s) "
+                         "failed:\n" + "\n".join(report))
+
+
+def fleet_script(body: str) -> list[str]:
+    """argv for one fleet member running `body` (a python source string).
+    The script can read its rank from REPRO_PROCESS_ID."""
+    return [sys.executable, "-c", body]

@@ -1,0 +1,168 @@
+"""Property-based fuzzing of the wire codec over REAL TCP sockets.
+
+The satellite contract of the multi-host PR: arbitrary dtypes, zero-size
+arrays, truncated/partial reads and interleaved frames must either
+roundtrip exactly or raise a clean `ProtocolError`/`EOFError` — never
+hang and never desync silently.  Every socket carries a receive deadline
+(`settimeout`), so a codec bug that WOULD hang surfaces as a visible
+timeout failure instead of wedging pytest."""
+import socket
+import struct
+import threading
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-test.txt)")
+import hypothesis.strategies as st  # noqa: E402
+import numpy as np
+
+from repro.sampling_service import wire
+from repro.sampling_service.transport import TcpTransport
+
+RECV_DEADLINE = 10.0  # no codec path may block longer than this
+
+DTYPES = [np.float32, np.float64, np.float16, np.int8, np.int16,
+          np.int32, np.int64, np.uint8, np.uint32, np.bool_,
+          np.complex64]
+
+
+@st.composite
+def array_dicts(draw):
+    """name -> array, covering 0-d, zero-size dims and every dtype."""
+    n = draw(st.integers(0, 5))
+    out = {}
+    for i in range(n):
+        name = draw(st.text(min_size=1, max_size=12)) + f"#{i}"  # unique
+        dtype = np.dtype(draw(st.sampled_from(DTYPES)))
+        ndim = draw(st.integers(0, 3))
+        shape = tuple(draw(st.integers(0, 4)) for _ in range(ndim))
+        size = int(np.prod(shape, dtype=np.int64))
+        # materialize from raw bytes so NaN payloads etc. survive as-is
+        raw = draw(st.binary(min_size=size * dtype.itemsize,
+                             max_size=size * dtype.itemsize))
+        out[name] = np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+    return out
+
+
+def _tcp_pair():
+    a, b = TcpTransport().pair()
+    for s in (a, b):
+        s.settimeout(RECV_DEADLINE)
+    return a, b
+
+
+def _chunked_send(sock: socket.socket, blob: bytes, chunks: list[int]):
+    """Send `blob` split at the (fuzzer-chosen) chunk boundaries —
+    exercises partial reads on the receiver."""
+    pos = 0
+    for c in chunks:
+        if pos >= len(blob):
+            break
+        sock.sendall(blob[pos:pos + max(c, 1)])
+        pos += max(c, 1)
+    if pos < len(blob):
+        sock.sendall(blob[pos:])
+
+
+@hypothesis.given(array_dicts(), st.lists(st.integers(1, 64), max_size=8))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_codec_roundtrip_over_tcp(arrays, chunks):
+    blob = wire.pack_arrays(arrays)
+    a, b = _tcp_pair()
+    try:
+        sender = threading.Thread(
+            target=_chunked_send, args=(a, struct.pack(">Q", len(blob))
+                                        + blob, chunks))
+        sender.start()
+        (n,) = struct.unpack(">Q", wire._recv_exact(b, 8))
+        got = wire.unpack_arrays(wire._recv_exact(b, n))
+        sender.join(RECV_DEADLINE)
+        assert list(got) == list(arrays)
+        for k in arrays:
+            assert got[k].dtype == arrays[k].dtype
+            assert got[k].shape == arrays[k].shape
+            # bit-exact: compare raw bytes, so NaNs don't compare unequal
+            assert got[k].tobytes() == arrays[k].tobytes()
+    finally:
+        a.close()
+        b.close()
+
+
+@hypothesis.given(st.data())
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_truncated_frame_raises_never_hangs(data):
+    """A frame cut anywhere (including inside the magic) then EOF must
+    raise EOFError (cut at byte 0) or ProtocolError — and return within
+    the socket deadline either way."""
+    frame = wire.encode_frame(wire.ASSIGN, {"epoch": 1,
+                                            "steps": [0, 1, 2]})
+    cut = data.draw(st.integers(0, len(frame) - 1))
+    a, b = _tcp_pair()
+    try:
+        if cut:
+            a.sendall(frame[:cut])
+        a.close()
+        with pytest.raises((wire.ProtocolError, EOFError)):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+@hypothesis.given(st.data())
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_stalled_frame_raises_within_frame_timeout(data):
+    """A peer that stops MID-frame without closing (live but wedged)
+    trips `frame_timeout` as a ProtocolError instead of blocking the
+    reader forever."""
+    frame = wire.encode_frame(wire.ASSIGN, {"epoch": 0, "steps": [4]})
+    cut = data.draw(st.integers(1, len(frame) - 1))
+    a, b = _tcp_pair()
+    try:
+        a.sendall(frame[:cut])  # ... and then silence, no close
+        with pytest.raises(wire.ProtocolError):
+            wire.recv_frame(b, frame_timeout=0.2)
+    finally:
+        a.close()
+        b.close()
+
+
+@hypothesis.given(st.lists(st.integers(1, 97), max_size=12),
+                  st.integers(2, 5))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_interleaved_frames_arrive_in_order(chunks, n_frames):
+    """Several frames written back-to-back and re-chunked arbitrarily by
+    the sender decode as the exact original sequence — framing never
+    desyncs on partial reads that span frame boundaries."""
+    frames = [wire.encode_frame(wire.ASSIGN, {"epoch": e, "steps": [e]})
+              for e in range(n_frames)]
+    a, b = _tcp_pair()
+    try:
+        blob = b"".join(frames)
+        sender = threading.Thread(target=_chunked_send,
+                                  args=(a, blob, chunks))
+        sender.start()
+        for e in range(n_frames):
+            kind, meta, graph = wire.recv_frame(b)
+            assert (kind, meta["epoch"], graph) == (wire.ASSIGN, e, None)
+        sender.join(RECV_DEADLINE)
+    finally:
+        a.close()
+        b.close()
+
+
+@hypothesis.given(st.binary(min_size=4, max_size=64))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_garbage_prefix_raises_clean_protocol_error(blob):
+    """Arbitrary non-frame bytes raise ProtocolError (bad magic or an
+    oversize/truncated header) — never a hang, never a silent skip."""
+    hypothesis.assume(not blob.startswith(wire.MAGIC))
+    a, b = _tcp_pair()
+    try:
+        a.sendall(blob)
+        a.close()
+        with pytest.raises((wire.ProtocolError, EOFError)):
+            wire.recv_frame(b)
+    finally:
+        b.close()
