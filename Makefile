@@ -2,6 +2,14 @@
 #
 #   make test          — the tier-1 command (collection must succeed even
 #                        without optional test deps like hypothesis)
+#   make lint          — repro-lint (tools/repro_lint): stdlib-only AST
+#                        checks for determinism/purity (PUR), thread/
+#                        socket/lock lifecycle (THR/SOC/LCK/BLE), jit/
+#                        pallas trace safety (TRC), wire-kind and
+#                        mesh-axis consistency (WIRE/MESH) and Pallas
+#                        VMEM envelope sanity (PAL).  Suppress a finding
+#                        with `# noqa: CODE — reason` (reason required);
+#                        exits non-zero on any non-baselined finding.
 #   make test-kernels  — kernel + dispatch parity suites in interpret mode
 #   make ci            — what the CI test matrix runs: both of the above
 #   make smoke         — end-to-end example drivers (quickstart + the
@@ -20,11 +28,14 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_BASELINE := $(or $(TMPDIR),/tmp)/repro_bench_baseline
 MULTIHOST_LOG_DIR ?= results/multihost_logs
 
-.PHONY: test test-kernels ci smoke smoke-multihost bench check-bench \
+.PHONY: test test-kernels ci lint smoke smoke-multihost bench check-bench \
     bench-dispatch
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+lint:
+	$(PYTHON) -m tools.repro_lint src
 
 test-kernels:
 	$(PYTHON) -m pytest -x -q tests/test_kernels.py tests/test_dispatch.py

@@ -9,24 +9,45 @@ exactly the paper's "padding graph + weight 0" recipe for Cloud TPUs.
 
 Registered as a pytree: feature dicts / sizes / adjacency are leaves, all
 names are static aux data, so GraphTensors pass through jit/grad/vmap/scan.
+
+jax is OPTIONAL here: the numpy-only sampler-worker children
+(`repro.sampling_service.worker` and its import closure, enforced by
+tools/repro_lint rule PUR005) build, stack and ship GraphTensors without
+an accelerator runtime.  Without jax every array op falls back to numpy
+and pytree registration is a no-op; `stack_graphs`/`unstack_graph` use a
+structural map with identical semantics (same error message, same leaf
+order).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Mapping, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+try:  # trainer processes have jax; sampler workers must not need it
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover — exercised by the jax-blocked
+    #                   subprocess test in tests/test_worker_numpy_only.py
+    jax = None
+    jnp = np
+
 Array = Any
+
+
+def _register_pytree(cls):
+    """jax pytree registration, a no-op in numpy-only processes."""
+    if jax is not None:
+        return jax.tree_util.register_pytree_node_class(cls)
+    return cls
 
 
 def _freeze(d: Mapping) -> dict:
     return dict(sorted(d.items()))
 
 
-@jax.tree_util.register_pytree_node_class
+@_register_pytree
 @dataclasses.dataclass
 class Context:
     """Per-component features. sizes[c] == 1 for real components, 0 for
@@ -55,7 +76,7 @@ class Context:
         return self.sizes > 0
 
 
-@jax.tree_util.register_pytree_node_class
+@_register_pytree
 @dataclasses.dataclass
 class NodeSet:
     sizes: Array                      # [C] int32 — valid nodes per component
@@ -91,7 +112,7 @@ class NodeSet:
                                 side="right").astype(jnp.int32)
 
 
-@jax.tree_util.register_pytree_node_class
+@_register_pytree
 @dataclasses.dataclass
 class Adjacency:
     source: Array                     # [capacity] int32 node indices
@@ -108,7 +129,7 @@ class Adjacency:
         return cls(children[0], children[1], aux[0], aux[1])
 
 
-@jax.tree_util.register_pytree_node_class
+@_register_pytree
 @dataclasses.dataclass
 class EdgeSet:
     sizes: Array                      # [C] int32 — valid edges per component
@@ -143,7 +164,7 @@ class EdgeSet:
                                 side="right").astype(jnp.int32)
 
 
-@jax.tree_util.register_pytree_node_class
+@_register_pytree
 @dataclasses.dataclass
 class GraphTensor:
     """A scalar GraphTensor (shape []) holding one merged batch of graphs
@@ -215,13 +236,58 @@ class GraphTensor:
 # ops must not run on it directly; `unstack_graph` (or a shard_map body that
 # slices its local group) restores scalar GraphTensors first.
 
+def _graph_structure(g: GraphTensor) -> tuple:
+    """Hashable structural fingerprint — the numpy-only stand-in for
+    jax's treedef (set names, capacities, feature keys, endpoint names)."""
+    return (
+        tuple(sorted(g.context.features)),
+        tuple((name, ns.capacity, tuple(sorted(ns.features)))
+              for name, ns in sorted(g.node_sets.items())),
+        tuple((name, es.capacity, tuple(sorted(es.features)),
+               es.adjacency.source_name, es.adjacency.target_name)
+              for name, es in sorted(g.edge_sets.items())),
+    )
+
+
+def _map_graphs(fn, graphs: "Sequence[GraphTensor]") -> GraphTensor:
+    """Structural tree-map over same-shaped GraphTensors, leaf by leaf —
+    `fn` receives one leaf per input graph, in input order.  Mirrors the
+    pytree leaf layout exactly (jax-free path for sampler workers)."""
+    g0 = graphs[0]
+    ctx = Context(fn(*[g.context.sizes for g in graphs]),
+                  {k: fn(*[g.context.features[k] for g in graphs])
+                   for k in g0.context.features})
+    node_sets = {}
+    for name, ns0 in g0.node_sets.items():
+        sets = [g.node_sets[name] for g in graphs]
+        node_sets[name] = NodeSet(
+            fn(*[s.sizes for s in sets]),
+            {k: fn(*[s.features[k] for s in sets]) for k in ns0.features},
+            ns0.capacity)
+    edge_sets = {}
+    for name, es0 in g0.edge_sets.items():
+        sets = [g.edge_sets[name] for g in graphs]
+        adj = Adjacency(fn(*[s.adjacency.source for s in sets]),
+                        fn(*[s.adjacency.target for s in sets]),
+                        es0.adjacency.source_name,
+                        es0.adjacency.target_name)
+        edge_sets[name] = EdgeSet(
+            fn(*[s.sizes for s in sets]), adj,
+            {k: fn(*[s.features[k] for s in sets]) for k in es0.features},
+            es0.capacity)
+    return GraphTensor(ctx, node_sets, edge_sets)
+
+
 def stack_graphs(graphs: "Sequence[GraphTensor]") -> GraphTensor:
     """Stack structurally identical padded GraphTensors on a new leading
     axis.  All inputs must share one treedef (same set names, capacities,
     feature keys) — i.e. be padded to the same SizeConstraints."""
     if not graphs:
         raise ValueError("stack_graphs: empty sequence")
-    treedefs = {jax.tree_util.tree_structure(g) for g in graphs}
+    if jax is not None:
+        treedefs = {jax.tree_util.tree_structure(g) for g in graphs}
+    else:
+        treedefs = {_graph_structure(g) for g in graphs}
     if len(treedefs) != 1:
         raise ValueError(
             "stack_graphs: inputs are not structurally identical "
@@ -233,7 +299,9 @@ def stack_graphs(graphs: "Sequence[GraphTensor]") -> GraphTensor:
             return np.stack(leaves)
         return jnp.stack([jnp.asarray(x) for x in leaves])
 
-    return jax.tree_util.tree_map(_stack, *graphs)
+    if jax is not None:
+        return jax.tree_util.tree_map(_stack, *graphs)
+    return _map_graphs(_stack, graphs)
 
 
 def stack_size(graph: GraphTensor) -> Optional[int]:
@@ -248,8 +316,10 @@ def unstack_graph(graph: GraphTensor) -> "list[GraphTensor]":
     scalar GraphTensors (index, don't copy — works on jit/shard_map
     tracers)."""
     n = graph.context.sizes.shape[0]
-    return [jax.tree_util.tree_map(lambda x, i=i: x[i], graph)
-            for i in range(n)]
+    if jax is not None:
+        return [jax.tree_util.tree_map(lambda x, i=i: x[i], graph)
+                for i in range(n)]
+    return [_map_graphs(lambda x, i=i: x[i], [graph]) for i in range(n)]
 
 
 HIDDEN_STATE = "hidden_state"

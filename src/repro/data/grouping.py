@@ -31,6 +31,14 @@ from repro.core.graph_tensor import GraphTensor, stack_graphs
 from repro.data.batching import SizeConstraints, merge_graphs, pad_to_sizes
 
 
+def epoch_rng(seed: int, epoch: int) -> np.random.Generator:
+    """The epoch-shuffle generator: (seed, epoch) -> Generator.  The
+    named single owner of this derivation — `BatchPlan.order` and any
+    out-of-process producer that re-derives an epoch's permutation must
+    key the generator identically or rank streams diverge."""
+    return np.random.default_rng((seed, epoch))
+
+
 @dataclasses.dataclass(frozen=True)
 class BatchPlan:
     """Deterministic mapping from (epoch, step) to dataset indices.
@@ -76,8 +84,7 @@ class BatchPlan:
         is the determinism anchor — every producer (batcher thread,
         sampler worker, restarted replacement worker) derives the same
         order independently."""
-        rng = np.random.default_rng((self.seed, epoch))
-        return rng.permutation(n_items)
+        return epoch_rng(self.seed, epoch).permutation(n_items)
 
     def num_steps(self, n_items: int) -> int:
         return n_items // self.batch_size

@@ -110,7 +110,7 @@ def prefetch(it: Iterator, depth: int = 2) -> Iterator:
         finally:
             _put(stop)
 
-    t = threading.Thread(target=worker, daemon=True)
+    t = threading.Thread(target=worker, daemon=True, name="graph-prefetch")
     t.start()
     try:
         while True:

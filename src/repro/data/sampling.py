@@ -237,14 +237,23 @@ class InMemorySampler:
     persists for the same roots and base seed."""
 
     def __init__(self, store: GraphStore, spec: SamplingSpec, *,
-                 seed: int = 0):
+                 seed: int = 0,
+                 rng_factory: Callable[[int], np.random.Generator]
+                 | None = None):
+        """`rng_factory(root) -> Generator` overrides the default
+        `seed_rng(seed, root)` derivation — the injection point for
+        callers that manage their own seed tree.  The factory must stay
+        a pure function of the root or the per-root determinism contract
+        above is lost."""
         self.store = store
         self.spec = spec
         self.seed = seed
+        self._rng_factory = rng_factory or (
+            lambda root: seed_rng(self.seed, root))
 
     def sample(self, roots: Sequence[int]) -> list[GraphTensor]:
         return [sample_subgraph(self.store, self.spec, int(r),
-                                seed_rng(self.seed, int(r)))
+                                self._rng_factory(int(r)))
                 for r in roots]
 
 

@@ -22,10 +22,17 @@ def synthetic_mag(*, n_papers: int = 2000, n_authors: int = 1200,
                   n_institutions: int = 60, n_fields: int = 120,
                   n_classes: int = 16, feat_dim: int = 64,
                   avg_cites: int = 6, avg_writes: int = 3,
-                  avg_topics: int = 4, seed: int = 0
+                  avg_topics: int = 4, seed: int = 0,
+                  rng: np.random.Generator | None = None
                   ) -> tuple[GraphStore, np.ndarray]:
-    """Returns (GraphStore, paper labels)."""
-    rng = np.random.default_rng(seed)
+    """Returns (GraphStore, paper labels).
+
+    All randomness flows through one `np.random.Generator` — pass `rng`
+    to splice this generator into a caller-owned seed tree
+    (`np.random.SeedSequence.spawn`); by default it derives from `seed`.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
     schema = mag_schema()
 
     # latent topics drive both features and labels
@@ -95,9 +102,12 @@ def synthetic_mag(*, n_papers: int = 2000, n_authors: int = 1200,
 
 
 def token_batches(*, batch: int, seq: int, vocab: int, steps: int,
-                  seed: int = 0):
-    """Synthetic LM batches: orderly Markov-ish streams (learnable)."""
-    rng = np.random.default_rng(seed)
+                  seed: int = 0, rng: np.random.Generator | None = None):
+    """Synthetic LM batches: orderly Markov-ish streams (learnable).
+    `rng` overrides the `seed`-derived generator (same contract as
+    `synthetic_mag`)."""
+    if rng is None:
+        rng = np.random.default_rng(seed)
     trans = rng.integers(0, vocab, (vocab, 4))
     for _ in range(steps):
         toks = np.empty((batch, seq + 1), np.int32)

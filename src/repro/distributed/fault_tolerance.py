@@ -163,10 +163,13 @@ class CheckpointManager:
                 save_checkpoint(self.directory, step, host_state,
                                 extra=extra)
                 self._gc()
-            except BaseException as exc:  # noqa: BLE001
+            except BaseException as exc:  # noqa: BLE001 — re-raised from
+                #                            wait()/close() on the
+                #                            training thread
                 self._error = exc
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread = threading.Thread(target=work, daemon=True,
+                                        name="ckpt-writer")
         self._thread.start()
 
     def wait(self):
@@ -176,6 +179,18 @@ class CheckpointManager:
         if self._error is not None:
             error, self._error = self._error, None
             raise error
+
+    def close(self):
+        """Join the in-flight writer (if any) and surface its error.
+        After close() no ckpt-writer thread is alive — the thread-
+        lifecycle contract repro-lint THR002 checks."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _gc(self):
         if not os.path.isdir(self.directory):

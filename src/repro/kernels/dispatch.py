@@ -137,6 +137,31 @@ MAX_FEATURE_DIM = 256    # flattened feature width cap
 _SUPPORTED_REDUCES = ("sum", "mean", "max", "min")
 _SUPPORTED_ACTIVATIONS = ("relu", "gelu", "identity")
 
+# Declared worst-case operating envelopes, one (or more, keyed
+# "kernel:variant") per registered kernel: the largest shapes each kernel
+# is expected to DISPATCH for, i.e. its choose_* function must return a
+# non-zero block there.  tools/repro_lint rule PAL002 re-evaluates these
+# corners against the budget model statically (no jax import) and
+# tests/test_dispatch.py asserts the dynamic decision agrees — so a
+# budget-model edit that silently shrinks a kernel's reachable range
+# fails lint instead of quietly benchmarking the reference.
+#
+# sum/mean run up to the full (MAX_SEGMENTS, MAX_FEATURE_DIM) cap; max/min
+# additionally materialise the [E_blk, N, D] masked broadcast, which
+# bounds their envelope to (2048, 64).  The mpnn corner is the MAG-scale
+# shape the Table-1 experiment dispatches: 4096 nodes each side, 128-wide
+# states and messages.
+WORST_CASE_ENVELOPES: dict[str, dict] = {
+    "segment_pool:sum": dict(n_segments=MAX_SEGMENTS, d=MAX_FEATURE_DIM,
+                             itemsize=4, reduce="sum"),
+    "segment_pool:max": dict(n_segments=2048, d=64, itemsize=4,
+                             reduce="max"),
+    "segment_pool:min": dict(n_segments=2048, d=64, itemsize=4,
+                             reduce="min"),
+    "edge_mpnn": dict(n_src=MAX_SEGMENTS, n_tgt=MAX_SEGMENTS,
+                      ds=128, dt=128, m=128, itemsize=4),
+}
+
 
 def _floor_pow2(x: int) -> int:
     return 1 << (max(int(x), 1).bit_length() - 1)

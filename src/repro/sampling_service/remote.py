@@ -170,7 +170,10 @@ class SamplerEndpoint:
                                      "num_steps": source_num_steps(source)})
                     continue
                 self._adopt(rank, conn)
-                if not rank_lock.acquire(timeout=self.hello_timeout):
+                if not rank_lock.acquire(  # noqa: LCK001 — `with` cannot
+                        # express acquire-with-timeout; release is in the
+                        # finally below, so no path leaks the lock
+                        timeout=self.hello_timeout):
                     raise wire.ProtocolError(
                         f"rank {rank} stream lock unavailable")
                 try:
@@ -190,7 +193,8 @@ class SamplerEndpoint:
                                               f"{exc}"})
                     return
                 finally:
-                    rank_lock.release()
+                    rank_lock.release()  # noqa: LCK001 — pairs with the
+                    # timeout-acquire above; finally guarantees release
         except socket.timeout:
             pass  # idle connection with no HELLO — reap it
         except (EOFError, OSError, wire.WireError):

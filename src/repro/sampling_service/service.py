@@ -68,7 +68,8 @@ def _kill_stragglers(procs, timeout: float = 1.0) -> None:
             if p.is_alive():
                 p.kill()
             p.join(timeout)
-        except Exception:  # noqa: BLE001 — teardown best-effort
+        except (OSError, ValueError):
+            # ESRCH/closed-handle races with normal exit; nothing to reap
             pass
 
 
@@ -78,8 +79,8 @@ def _proc_dead(owner: int, p) -> bool:
         return False  # fork-inherited handle: not ours to test or prune
     try:
         return not p.is_alive()
-    except Exception:  # noqa: BLE001 — closed/foreign handles stay listed
-        return False
+    except (OSError, ValueError):
+        return False  # closed/foreign handles stay listed
 
 
 def _prune_spawn_registry() -> None:

@@ -75,9 +75,15 @@ class TcpTransport(Transport):
             lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
             lsock.bind((self.host, 0))
             lsock.listen(1)
+            # our own connect is already in the backlog, so accept()
+            # returns immediately — the timeout only bounds the
+            # pathological case (host firewalling loopback mid-pair)
+            # instead of hanging forever (repro-lint SOC001)
+            lsock.settimeout(5.0)
             worker_end = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
             worker_end.connect(lsock.getsockname())
             trainer_end, _ = lsock.accept()
+            trainer_end.settimeout(None)
         for s in (trainer_end, worker_end):
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         return trainer_end, worker_end

@@ -317,3 +317,21 @@ def test_segment_reduce_empty_segment_yields_zero():
             out = dispatch.segment_reduce(vals, seg, 3, reduce)
         np.testing.assert_array_equal(np.asarray(out[1]), 0)
         np.testing.assert_array_equal(np.asarray(out[2]), 0)
+
+
+def test_worst_case_envelopes_are_dispatchable():
+    """Every declared envelope corner (WORST_CASE_ENVELOPES) must yield a
+    non-zero block from the kernel's own choose function — the dynamic
+    twin of repro-lint rule PAL002, so the table can't drift from the
+    budget model without a test telling you which side moved."""
+    assert dispatch.WORST_CASE_ENVELOPES, "envelope table must not be empty"
+    choosers = {"segment_pool": dispatch.choose_e_block,
+                "edge_mpnn": dispatch.choose_mpnn_e_block}
+    registered = set(dispatch.registry())
+    for key, params in dispatch.WORST_CASE_ENVELOPES.items():
+        kernel = key.split(":", 1)[0]
+        assert kernel in registered, f"stale envelope key {key!r}"
+        block = choosers[kernel](**params)
+        assert block > 0, (f"envelope {key!r} ({params}) exceeds the VMEM "
+                           f"budget — the kernel could never dispatch at "
+                           f"its declared worst case")

@@ -54,6 +54,30 @@ def test_checkpoint_manager_retention_and_async(tmp_path):
     assert restored is not None and restored[0] == 30
 
 
+def test_checkpoint_manager_close_joins_writer(tmp_path):
+    # the thread-lifecycle contract repro-lint THR002 enforces statically,
+    # checked dynamically: close() (and the context-manager exit) must
+    # leave no live "ckpt-writer" thread
+    import threading
+
+    def alive():
+        return [t for t in threading.enumerate()
+                if t.name == "ckpt-writer" and t.is_alive()]
+
+    state = {"w": np.ones(4, np.float32)}
+    with CheckpointManager(str(tmp_path), keep=2) as mgr:
+        mgr.save_async(10, state)
+    assert not alive()
+    # close() also surfaces a writer failure on the calling thread
+    mgr2 = CheckpointManager(str(tmp_path / "missing_parent"), keep=1)
+    mgr2.save_async(5, state)
+    mgr2._thread.join()
+    mgr2._error = RuntimeError("injected writer failure")
+    with pytest.raises(RuntimeError, match="injected writer failure"):
+        mgr2.close()
+    assert not alive()
+
+
 def test_train_restart_resumes(tmp_path):
     """Kill-and-restart: resumed run continues from the checkpoint step."""
     from repro.launch import train as train_mod

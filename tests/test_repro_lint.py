@@ -1,0 +1,531 @@
+"""Tests for tools/repro_lint.
+
+Every rule family gets a violating fixture, a clean fixture and a
+suppressed fixture (the repo's `# noqa: CODE — reason` idiom).  The
+cross-file rules (WIRE001 / MESH001 / PAL00x) are additionally proven
+LIVE against the real tree: a copy of src/ is mutated to introduce the
+inconsistency and the rule must catch it.  Finally the shipped tree must
+lint clean — with the committed (empty) baseline — inside the 10s bound.
+
+These tests import nothing from jax: the linter is stdlib-only by
+design (it runs in a CI job with no accelerator deps installed).
+"""
+import shutil
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.repro_lint.diagnostics import Diagnostic, parse_noqa
+from tools.repro_lint.engine import load_baseline, run_lint, write_baseline
+from tools.repro_lint.rules import all_rules
+
+
+def lint_tree(root: Path, files: dict, select=None, baseline=None):
+    """Write `files` ({relpath: source}) under `root` and lint them."""
+    for rel, source in files.items():
+        path = root / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(source))
+    return run_lint([str(root)], all_rules(), select=select,
+                    baseline=baseline)
+
+
+def codes(result):
+    return sorted({d.code for d in result.diagnostics})
+
+
+# ---------------------------------------------------------------------------
+# diagnostics / noqa parsing
+# ---------------------------------------------------------------------------
+
+def test_diagnostic_format_and_baseline_key():
+    d = Diagnostic("src/m.py", 12, 4, "PUR001", "msg")
+    assert d.format() == "src/m.py:12:4: PUR001 msg"
+    assert d.baseline_key() == "src/m.py::PUR001::msg"
+
+
+def test_parse_noqa_reason_and_codes():
+    table = parse_noqa(
+        "x = 1  # noqa: BLE001 — teardown best-effort\n"
+        "y = 2  # noqa: PUR001, THR002 -- two codes, ascii dashes\n"
+        "z = 3  # noqa: SOC001\n")
+    assert table[1].covers("BLE001") and table[1].reason
+    assert table[2].covers("PUR001") and table[2].covers("THR002")
+    assert table[3].covers("SOC001") and not table[3].reason
+
+
+# ---------------------------------------------------------------------------
+# PUR — purity / determinism
+# ---------------------------------------------------------------------------
+
+def test_pur001_legacy_numpy_global_rng(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import numpy as np
+        x = np.random.rand(3)
+    """})
+    assert codes(r) == ["PUR001"]
+
+
+def test_pur001_clean_generator_api(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import numpy as np
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=3)
+        ss = np.random.SeedSequence(42)
+    """})
+    assert not r.diagnostics
+
+
+def test_pur001_suppressed_with_reason(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import numpy as np
+        x = np.random.rand(3)  # noqa: PUR001 — fixture for docs
+    """})
+    assert not r.diagnostics and len(r.suppressed) == 1
+
+
+def test_pur002_stdlib_random(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import random
+        x = random.random()
+    """})
+    assert codes(r) == ["PUR002"]
+
+
+def test_pur003_wall_clock_only_in_determinism_scope(tmp_path):
+    clocky = """
+        import time
+        def stamp():
+            return time.time()
+    """
+    in_scope = lint_tree(tmp_path / "a",
+                         {"repro/data/clocky.py": clocky})
+    assert codes(in_scope) == ["PUR003"]
+    out_of_scope = lint_tree(tmp_path / "b", {"clocky.py": clocky})
+    assert not out_of_scope.diagnostics
+    pacing = lint_tree(tmp_path / "c", {"repro/data/pacing.py": """
+        import time
+        def wait():
+            time.sleep(0.1)
+            return time.monotonic()
+    """})
+    assert not pacing.diagnostics  # pacing/timeouts are not data
+
+
+def test_pur004_unseeded_default_rng(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import numpy as np
+        rng = np.random.default_rng()
+    """})
+    assert codes(r) == ["PUR004"]
+
+
+def test_pur005_jax_reachable_from_worker_closure(tmp_path):
+    r = lint_tree(tmp_path, {
+        "pkg/__init__.py": "",
+        "pkg/util.py": "import jax\n",
+        "pkg/sampling_service/__init__.py": "",
+        "pkg/sampling_service/worker.py": "from pkg.util import jax\n",
+    })
+    assert codes(r) == ["PUR005"]
+    [d] = r.diagnostics
+    assert "pkg/util.py" in d.path and "import chain" in d.message
+
+
+def test_pur005_guarded_import_is_clean(tmp_path):
+    r = lint_tree(tmp_path, {
+        "pkg/__init__.py": "",
+        "pkg/util.py": """
+            try:
+                import jax
+            except ImportError:
+                jax = None
+            def f():
+                import jax.numpy as jnp  # lazy: fine
+        """,
+        "pkg/sampling_service/__init__.py": "",
+        "pkg/sampling_service/worker.py": "from pkg import util\n",
+    })
+    assert not r.diagnostics
+
+
+def test_pur005_ancestor_init_joins_closure(tmp_path):
+    # importing pkg.core.data executes pkg/core/__init__.py too
+    r = lint_tree(tmp_path, {
+        "pkg/__init__.py": "",
+        "pkg/core/__init__.py": "import jax\n",
+        "pkg/core/data.py": "x = 1\n",
+        "pkg/sampling_service/__init__.py": "",
+        "pkg/sampling_service/worker.py": "from pkg.core import data\n",
+    })
+    assert codes(r) == ["PUR005"]
+    assert "core/__init__.py" in r.diagnostics[0].path
+
+
+# ---------------------------------------------------------------------------
+# THR / SOC / LCK / BLE — concurrency lifecycle
+# ---------------------------------------------------------------------------
+
+def test_thr001_non_daemon_thread(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import threading
+        def go(f):
+            t = threading.Thread(target=f)
+            t.start()
+            t.join()
+    """})
+    assert codes(r) == ["THR001"]
+
+
+def test_thr002_started_never_joined(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import threading
+        def go(f):
+            t = threading.Thread(target=f, daemon=True)
+            t.start()
+    """})
+    assert codes(r) == ["THR002"]
+
+
+def test_thr002_joined_is_clean(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import threading
+        def go(f):
+            t = threading.Thread(target=f, daemon=True)
+            t.start()
+            t.join(timeout=5.0)
+    """})
+    assert not r.diagnostics
+
+
+def test_thr002_escaped_thread_assumed_managed(tmp_path):
+    # a handle passed to an unknown callable / stored in a container is
+    # assumed managed elsewhere — the rule prefers false negatives
+    r = lint_tree(tmp_path, {"mod.py": """
+        import threading
+        def go(f, registry, track):
+            t = threading.Thread(target=f, daemon=True)
+            t.start()
+            registry.append((1, t))
+            track(handle=t)
+    """})
+    assert not r.diagnostics
+
+
+def test_soc001_recv_without_timeout(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import socket
+        def read(sock):
+            return sock.recv(4)
+    """})
+    assert codes(r) == ["SOC001"]
+    clean = lint_tree(tmp_path / "c", {"mod.py": """
+        import socket
+        def read(sock):
+            sock.settimeout(5.0)
+            return sock.recv(4)
+    """})
+    assert not clean.diagnostics
+
+
+def test_lck001_manual_acquire_release(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import threading
+        lock = threading.Lock()
+        def f():
+            lock.acquire()
+            lock.release()
+    """})
+    assert "LCK001" in codes(r)
+    clean = lint_tree(tmp_path / "c", {"mod.py": """
+        import threading
+        lock = threading.Lock()
+        def f():
+            with lock:
+                pass
+    """})
+    assert not clean.diagnostics
+
+
+def test_ble001_broad_except_needs_justification(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        def f():
+            try:
+                return 1
+            except Exception:
+                return 0
+    """})
+    assert codes(r) == ["BLE001"]
+    tagged = lint_tree(tmp_path / "t", {"mod.py": """
+        def f():
+            try:
+                return 1
+            except Exception:  # noqa: BLE001 — interpreter teardown
+                return 0
+    """})
+    assert not tagged.diagnostics and len(tagged.suppressed) == 1
+
+
+def test_ble002_bare_except(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        def f():
+            try:
+                return 1
+            except:
+                return 0
+    """})
+    assert codes(r) == ["BLE002"]
+
+
+def test_noqa_without_reason_does_not_suppress(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        def f():
+            try:
+                return 1
+            except Exception:  # noqa: BLE001
+                return 0
+    """})
+    assert codes(r) == ["BLE001"]
+    assert "no justification" in r.diagnostics[0].message
+
+
+# ---------------------------------------------------------------------------
+# TRC — trace safety
+# ---------------------------------------------------------------------------
+
+def test_trc001_print_inside_jit(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import jax
+        @jax.jit
+        def f(x):
+            print(x)
+            return x
+    """})
+    assert codes(r) == ["TRC001"]
+
+
+def test_trc_clean_outside_trace(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        def f(x):
+            print(x)
+            return bool(x)
+    """})
+    assert not r.diagnostics
+
+
+def test_trc002_item_inside_jit(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import jax
+        @jax.jit
+        def f(x):
+            return x.sum().item()
+    """})
+    assert codes(r) == ["TRC002"]
+
+
+def test_trc004_bool_of_tracer(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import jax
+        @jax.jit
+        def f(x):
+            if bool(x):
+                return x
+            return -x
+    """})
+    assert codes(r) == ["TRC004"]
+
+
+def test_trc_reaches_through_local_helper(tmp_path):
+    # the closure walk: a module-local helper called from a jitted body
+    # is part of the traced region
+    r = lint_tree(tmp_path, {"mod.py": """
+        import jax
+        def helper(x):
+            print(x)
+            return x
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """})
+    assert codes(r) == ["TRC001"]
+
+
+def test_trc_pallas_call_body(tmp_path):
+    r = lint_tree(tmp_path, {"mod.py": """
+        import jax.experimental.pallas as pl
+        def kernel(x_ref, o_ref):
+            print(x_ref[...])
+            o_ref[...] = x_ref[...]
+        def run(x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+    """})
+    assert codes(r) == ["TRC001"]
+
+
+# ---------------------------------------------------------------------------
+# cross-file rules, proven live against a mutated copy of src/
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def src_copy(tmp_path):
+    dst = tmp_path / "src"
+    shutil.copytree(REPO / "src", dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    return dst
+
+
+def test_wire001_unreferenced_kind_caught(src_copy):
+    wire = src_copy / "repro/sampling_service/wire.py"
+    wire.write_text(wire.read_text() + '\nPING = "ping"\n')
+    r = run_lint([str(src_copy)], all_rules(), select={"WIRE001"})
+    assert codes(r) == ["WIRE001"]
+    assert "PING" in r.diagnostics[0].message
+
+
+def test_wire001_clean_on_unmutated_copy(src_copy):
+    r = run_lint([str(src_copy)], all_rules(), select={"WIRE001"})
+    assert not r.diagnostics
+
+
+def test_mesh001_undeclared_axis_caught(src_copy):
+    sharding = src_copy / "repro/distributed/sharding.py"
+    text = sharding.read_text()
+    marker = "DEFAULT_ACT_RULES: dict[str, Any] = {"
+    assert marker in text
+    sharding.write_text(text.replace(
+        marker, marker + '\n    "lint_fixture": ("undeclared_axis",),', 1))
+    r = run_lint([str(src_copy)], all_rules(), select={"MESH001"})
+    assert codes(r) == ["MESH001"]
+    assert "undeclared_axis" in r.diagnostics[0].message
+
+
+def test_pal002_overbudget_envelope_caught(src_copy):
+    dispatch = src_copy / "repro/kernels/dispatch.py"
+    text = dispatch.read_text()
+    needle = 'itemsize=4, reduce="sum")'
+    assert needle in text
+    dispatch.write_text(
+        text.replace(needle, 'itemsize=256, reduce="sum")', 1))
+    r = run_lint([str(src_copy)], all_rules(), select={"PAL002"})
+    assert codes(r) == ["PAL002"]
+    assert "exceeds the VMEM budget" in r.diagnostics[0].message
+
+
+def test_pal001_unregistered_envelope_required(src_copy):
+    dispatch = src_copy / "repro/kernels/dispatch.py"
+    text = dispatch.read_text()
+    # empty the envelope table: every registered kernel loses its pin
+    import re
+    new, n = re.subn(r"WORST_CASE_ENVELOPES.*?\n\}",
+                     "WORST_CASE_ENVELOPES: dict[str, dict] = {}",
+                     text, count=1, flags=re.S)
+    assert n == 1
+    dispatch.write_text(new)
+    r = run_lint([str(src_copy)], all_rules(), select={"PAL001"})
+    assert "PAL001" in codes(r)
+
+
+def test_pal003_stale_envelope_key_caught(src_copy):
+    dispatch = src_copy / "repro/kernels/dispatch.py"
+    text = dispatch.read_text()
+    marker = "WORST_CASE_ENVELOPES: dict[str, dict] = {"
+    assert marker in text
+    dispatch.write_text(text.replace(
+        marker,
+        marker + '\n    "not_a_kernel": dict(n_segments=8, d=8, '
+                 'itemsize=4, reduce="sum"),', 1))
+    r = run_lint([str(src_copy)], all_rules(), select={"PAL003"})
+    assert codes(r) == ["PAL003"]
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics
+# ---------------------------------------------------------------------------
+
+def test_baseline_silences_then_shrinks(tmp_path):
+    files = {"mod.py": "import numpy as np\nx = np.random.rand(3)\n"}
+    first = lint_tree(tmp_path, files)
+    assert first.failed
+    bl_path = tmp_path / "baseline.txt"
+    write_baseline(str(bl_path), first.diagnostics)
+    baseline = load_baseline(str(bl_path))
+    second = run_lint([str(tmp_path)], all_rules(), baseline=baseline)
+    assert not second.failed and len(second.baselined) == 1
+    # a NEW finding still fails even with the baseline in place
+    (tmp_path / "mod.py").write_text(
+        "import numpy as np\nx = np.random.rand(3)\n"
+        "y = np.random.default_rng()\n")
+    third = run_lint([str(tmp_path)], all_rules(), baseline=baseline)
+    assert third.failed and codes(third) == ["PUR004"]
+
+
+# ---------------------------------------------------------------------------
+# CLI (subprocess — the exact entry point make lint / CI use)
+# ---------------------------------------------------------------------------
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *args],
+        cwd=REPO, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "mod.py").write_text("import numpy as np\n"
+                                "x = np.random.rand(3)\n")
+    proc = run_cli(str(bad), "--no-baseline")
+    assert proc.returncode == 1
+    assert "PUR001" in proc.stdout
+
+    good = tmp_path / "good"
+    good.mkdir()
+    (good / "mod.py").write_text("x = 1\n")
+    proc = run_cli(str(good), "--no-baseline")
+    assert proc.returncode == 0
+
+
+def test_cli_select_and_output(tmp_path):
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "mod.py").write_text(
+        "import numpy as np\nimport random\n"
+        "x = np.random.rand(3)\ny = random.random()\n")
+    out = tmp_path / "diag.txt"
+    proc = run_cli(str(bad), "--no-baseline", "--select", "PUR002",
+                   "--output", str(out))
+    assert proc.returncode == 1
+    assert "PUR001" not in proc.stdout and "PUR002" in proc.stdout
+    assert "PUR002" in out.read_text()
+
+
+def test_cli_list_rules():
+    proc = run_cli("--list-rules")
+    assert proc.returncode == 0
+    for code in ("PUR001", "THR002", "TRC001", "WIRE001", "MESH001",
+                 "PAL002"):
+        assert code in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree lints clean, fast, with the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_shipped_tree_is_clean_and_fast():
+    baseline = load_baseline(str(REPO / "tools/repro_lint/baseline.txt"))
+    t0 = time.monotonic()
+    r = run_lint([str(REPO / "src")], all_rules(), baseline=baseline)
+    elapsed = time.monotonic() - t0
+    assert not r.failed, "\n".join(d.format() for d in r.diagnostics)
+    assert elapsed < 10.0, f"lint took {elapsed:.1f}s (budget: 10s)"
+    # the suppression idiom is exercised by the real tree (every tag
+    # carries a reason, or it would have been re-emitted above)
+    assert r.suppressed, "expected justified noqa tags in src/"

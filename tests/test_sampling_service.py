@@ -346,6 +346,24 @@ def test_prefetch_order_preserved():
     assert list(prefetch(iter(range(100)), depth=3)) == list(range(100))
 
 
+def test_prefetch_no_live_named_thread_after_close():
+    # the thread-lifecycle contract repro-lint THR002 enforces statically,
+    # checked dynamically: closing the generator (normally or early) must
+    # leave no live "graph-prefetch" thread behind
+    def alive():
+        return [t for t in threading.enumerate()
+                if t.name == "graph-prefetch" and t.is_alive()]
+
+    list(prefetch(iter(range(10)), depth=2))  # exhausted normally
+    it = prefetch(iter(range(1000)), depth=1)
+    next(it)
+    it.close()  # closed early, producer blocked on a full queue
+    deadline = time.time() + 5.0
+    while alive() and time.time() < deadline:
+        time.sleep(0.01)
+    assert not alive()
+
+
 # ---------------------------------------------------------------------------
 # runner integration
 # ---------------------------------------------------------------------------

@@ -1,0 +1,66 @@
+"""The sampler worker's numpy-only contract, enforced end-to-end.
+
+repro-lint rule PUR005 checks *statically* that no unguarded jax import
+is reachable from ``repro.sampling_service.worker``.  This test is the
+dynamic other half: a subprocess where importing jax RAISES builds a
+real padded super-batch through the worker's own ``build_step`` path and
+proves jax never entered ``sys.modules``.  This is the contract that
+lets the sampler fleet run on cheap CPU-only hosts.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_SCRIPT = textwrap.dedent("""
+    import sys
+
+    class _BlockJax:
+        # a finder FIRST in line: any attempt to import jax fails loudly
+        def find_spec(self, name, path=None, target=None):
+            if name == "jax" or name.startswith("jax."):
+                raise ImportError(f"jax import blocked by test: {name}")
+            return None
+
+    sys.meta_path.insert(0, _BlockJax())
+
+    import numpy as np
+    from repro.core.schema import mag_schema
+    from repro.data.batching import find_size_constraints
+    from repro.data.grouping import BatchPlan
+    from repro.data.sampling import InMemorySampler, SamplingSpecBuilder
+    from repro.data.synthetic import synthetic_mag
+    from repro.sampling_service.worker import SamplerWorker
+
+    store, _ = synthetic_mag(n_papers=120, n_authors=60, n_institutions=6,
+                             n_fields=12, n_classes=4, feat_dim=16)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    seed_op.sample(4, "cites")
+    spec = seed_op.build()
+    roots = list(range(32))
+    graphs = InMemorySampler(store, spec, seed=0).sample(roots[:8])
+    sizes = find_size_constraints(graphs, 4)
+
+    plan = BatchPlan(8, seed=0, num_replicas=2)
+    worker = SamplerWorker(0, sock=None, store=store, spec=spec,
+                           seeds=roots, plan=plan, sizes=sizes)
+    batch = worker.build_step(epoch=0, step=1)
+
+    leaf = batch.node_sets["paper"].features["feat"]
+    assert isinstance(leaf, np.ndarray), type(leaf)
+    assert leaf.ndim == 3  # [R, padded_nodes, feat] super-batch layout
+    assert "jax" not in sys.modules, "jax leaked into the worker closure"
+    print("OK", leaf.shape)
+""")
+
+
+def test_worker_builds_batch_with_jax_blocked():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=180)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.startswith("OK")

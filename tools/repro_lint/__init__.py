@@ -1,0 +1,26 @@
+"""repro-lint — an AST-based invariant checker for this repository.
+
+Five rule families, each grounded in a past bug class (see README.md):
+
+  PUR  purity/determinism   — the (plan, seeds, base_seed, epoch, step)
+                              -> batch sampling contract
+  THR/SOC/LCK/BLE            — concurrency lifecycle (threads joined,
+                              sockets time-bounded, locks scoped,
+                              excepts narrow or justified)
+  TRC  trace-safety          — no host side effects inside jit/shard_map/
+                              pallas_call bodies
+  WIRE/MESH                  — cross-file consistency (frame kinds
+                              handled; logical axes name declared mesh
+                              axes)
+  PAL  Pallas budget sanity  — registered kernels' declared worst-case
+                              envelopes fit the VMEM budget
+
+Pure stdlib (`ast`) — no jax, no numpy, no third-party deps — so it runs
+anywhere in well under a second.  Entry point: ``python -m
+tools.repro_lint src`` (or ``make lint``).
+"""
+from tools.repro_lint.diagnostics import Diagnostic  # noqa: F401
+from tools.repro_lint.engine import (LintResult, Project, Rule,  # noqa: F401
+                                     run_lint)
+
+__all__ = ["Diagnostic", "LintResult", "Project", "Rule", "run_lint"]

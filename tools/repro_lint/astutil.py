@@ -1,0 +1,82 @@
+"""Shared AST helpers: dotted-name resolution through a module's imports.
+
+The rules never "type-check"; they resolve syntactic dotted names through
+the module's own import statements (``import numpy as np`` makes
+``np.random.rand`` resolve to ``numpy.random.rand``).  That is exactly as
+strong as the conventions the codebase already follows and keeps every
+rule O(module size).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def import_map(tree: ast.Module) -> dict[str, str]:
+    """Local binding -> fully qualified origin, from import statements.
+
+    ``import numpy as np``              -> {"np": "numpy"}
+    ``import numpy.random``             -> {"numpy": "numpy"}
+    ``from numpy import random``        -> {"random": "numpy.random"}
+    ``from time import time``           -> {"time": "time.time"}
+    """
+    mapping: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.asname:
+                    mapping[alias.asname] = alias.name
+                else:
+                    top = alias.name.split(".")[0]
+                    mapping[top] = top
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module:
+            for alias in node.names:
+                mapping[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+    return mapping
+
+
+def resolve(node: ast.AST, imports: dict[str, str]) -> Optional[str]:
+    """Fully qualified dotted name of `node`, or None if its root is not
+    an imported binding (a local variable, attribute of self, ...)."""
+    name = dotted(node)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = imports.get(head)
+    if origin is None:
+        return None
+    return f"{origin}.{rest}" if rest else origin
+
+
+def build_parents(tree: ast.Module) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def walk_functions(tree: ast.Module) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def str_const(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

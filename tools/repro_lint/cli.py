@@ -1,0 +1,91 @@
+"""Command-line front end: ``python -m tools.repro_lint [paths...]``.
+
+Exit codes: 0 clean (modulo baseline + justified suppressions), 1 when
+any non-baselined finding remains, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Optional, Sequence
+
+from tools.repro_lint.engine import (load_baseline, run_lint,
+                                     write_baseline)
+from tools.repro_lint.rules import all_rules
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.txt")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST-based invariant checker for this repository "
+                    "(purity, concurrency, trace-safety, wire/mesh "
+                    "consistency, Pallas budgets).")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline file of grandfathered findings")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline file")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="rewrite the baseline from current findings")
+    parser.add_argument("--select", default=None,
+                        help="comma-separated codes to run (e.g. "
+                             "PUR001,THR002)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print every rule family and exit")
+    parser.add_argument("--output", default=None,
+                        help="also write the diagnostics to this file")
+    parser.add_argument("-q", "--quiet", action="store_true",
+                        help="print findings only, no summary line")
+    args = parser.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for rule in rules:
+            print(f"{'/'.join(rule.codes):28s} {rule.name}: {rule.summary}")
+        return 0
+
+    for p in args.paths:
+        if not os.path.exists(p):
+            print(f"repro-lint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    baseline = set() if args.no_baseline \
+        else load_baseline(args.baseline)
+    select = {c.strip() for c in args.select.split(",")} \
+        if args.select else None
+
+    t0 = time.monotonic()
+    result = run_lint(args.paths, rules, baseline=baseline, select=select)
+    dt = time.monotonic() - t0
+
+    lines = [d.format() for d in result.diagnostics]
+    for line in lines:
+        print(line)
+    if args.output:
+        out_dir = os.path.dirname(args.output)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write("\n".join(lines) + ("\n" if lines else ""))
+
+    if args.write_baseline:
+        write_baseline(args.baseline, result.diagnostics)
+        print(f"wrote {len(result.diagnostics)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    if not args.quiet:
+        print(f"repro-lint: {len(result.diagnostics)} finding(s), "
+              f"{len(result.suppressed)} suppressed, "
+              f"{len(result.baselined)} baselined "
+              f"({dt:.2f}s)", file=sys.stderr)
+    return 1 if result.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Diagnostics and the repo's ``# noqa: CODE — reason`` suppression idiom.
+
+A suppression must carry a justification: ``# noqa: BLE001`` alone does
+NOT silence the finding (the engine re-emits it asking for a reason).
+The separator accepts the em dash used across the repo plus the ASCII
+fallbacks ``--`` and ``-``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_NOQA_RE = re.compile(
+    r"#\s*noqa:?\s*(?P<codes>[A-Z]{2,6}\d{3}(?:\s*,\s*[A-Z]{2,6}\d{3})*)"
+    r"(?:\s*(?:—|–|--|-)\s*(?P<reason>\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One finding, anchored to a repo-relative ``path:line:col``."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} " \
+               f"{self.message}"
+
+    def baseline_key(self) -> str:
+        """Line-number-free identity used by the baseline file, so
+        grandfathered findings survive unrelated edits above them."""
+        return f"{self.path}::{self.code}::{self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    codes: tuple[str, ...]
+    reason: str  # "" when the tag carries no justification
+
+    def covers(self, code: str) -> bool:
+        return code in self.codes
+
+
+def parse_noqa(text: str) -> dict[int, Suppression]:
+    """Map 1-based line number -> Suppression for every noqa comment."""
+    out: dict[int, Suppression] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        if "noqa" not in line:
+            continue
+        m = _NOQA_RE.search(line)
+        if not m:
+            continue
+        codes = tuple(c.strip() for c in m.group("codes").split(","))
+        out[i] = Suppression(codes, (m.group("reason") or "").strip())
+    return out

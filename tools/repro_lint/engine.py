@@ -1,0 +1,213 @@
+"""repro-lint engine: file discovery, parsing, rule running, suppression
+and the committed baseline.
+
+Design notes
+------------
+* A :class:`ParsedModule` carries the AST plus everything rules keep
+  re-deriving (import map, parent pointers, noqa table), computed once.
+* Module names are derived from the path relative to the scan root
+  (``src/repro/data/pipeline.py`` -> ``repro.data.pipeline``); project
+  rules match modules by *dotted-suffix* so they work identically on the
+  real tree and on fixture copies living under a tmp dir.
+* Suppression follows the repo idiom ``# noqa: CODE — reason``.  A tag
+  without a reason does not suppress: the finding is re-emitted with a
+  request for the justification (that is the point of the idiom).
+* The baseline file holds line-number-free keys for grandfathered
+  findings; anything NOT in the baseline fails the run.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, Optional, Sequence
+
+from tools.repro_lint.astutil import build_parents, import_map
+from tools.repro_lint.diagnostics import (Diagnostic, Suppression,
+                                          parse_noqa)
+
+
+class ParsedModule:
+    def __init__(self, path: str, rel: str, module_name: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.module_name = module_name
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self.noqa: dict[int, Suppression] = parse_noqa(text)
+        self._imports: Optional[dict[str, str]] = None
+        self._parents: Optional[dict[ast.AST, ast.AST]] = None
+
+    @property
+    def imports(self) -> dict[str, str]:
+        if self._imports is None:
+            self._imports = import_map(self.tree)
+        return self._imports
+
+    @property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = build_parents(self.tree)
+        return self._parents
+
+    def diag(self, node: ast.AST, code: str, message: str) -> Diagnostic:
+        return Diagnostic(self.rel, getattr(node, "lineno", 1),
+                          getattr(node, "col_offset", 0), code, message)
+
+
+class Project:
+    """All modules under the scan roots, addressable by dotted name."""
+
+    def __init__(self, modules: Sequence[ParsedModule]):
+        self.modules = list(modules)
+        self.by_name = {m.module_name: m for m in self.modules}
+
+    def resolve(self, dotted_name: str) -> Optional[ParsedModule]:
+        """Find a module by dotted name, tolerating a missing leading
+        prefix (fixture trees and non-src roots)."""
+        parts = dotted_name.split(".")
+        for i in range(len(parts)):
+            m = self.by_name.get(".".join(parts[i:]))
+            if m is not None:
+                return m
+        return None
+
+    def find_suffix(self, suffix: str) -> Optional[ParsedModule]:
+        """The unique module whose dotted name ends with `suffix`."""
+        hits = [m for m in self.modules
+                if m.module_name == suffix
+                or m.module_name.endswith("." + suffix)]
+        return hits[0] if len(hits) == 1 else None
+
+
+class Rule:
+    """Base class: subclasses emit one or more of `codes`."""
+
+    codes: tuple[str, ...] = ()
+    name: str = ""
+    summary: str = ""
+
+    def check_module(self, module: ParsedModule,
+                     project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+
+# ---------------------------------------------------------------------------
+# Discovery
+# ---------------------------------------------------------------------------
+
+def _module_name(rel_posix: str) -> str:
+    parts = rel_posix[:-len(".py")].split("/")
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else rel_posix
+
+
+def discover(paths: Sequence[str]) -> list[ParsedModule]:
+    modules: list[ParsedModule] = []
+    seen: set[str] = set()
+    for root in paths:
+        root = os.path.abspath(root)
+        if os.path.isfile(root):
+            files = [(os.path.dirname(root), root)]
+        else:
+            files = []
+            for dirpath, dirnames, filenames in os.walk(root):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d != "__pycache__"
+                                     and not d.startswith("."))
+                for f in sorted(filenames):
+                    if f.endswith(".py"):
+                        files.append((root, os.path.join(dirpath, f)))
+        for base, path in files:
+            if path in seen:
+                continue
+            seen.add(path)
+            rel = os.path.relpath(path, base).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as fh:
+                text = fh.read()
+            display = os.path.relpath(path, os.getcwd())
+            if display.startswith(".."):
+                display = path
+            modules.append(ParsedModule(path, display.replace(os.sep, "/"),
+                                        _module_name(rel), text))
+    return modules
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> set[str]:
+    if not path or not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as fh:
+        return {line.strip() for line in fh
+                if line.strip() and not line.startswith("#")}
+
+
+def write_baseline(path: str, diags: Sequence[Diagnostic]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("# repro-lint baseline — grandfathered findings.\n"
+                 "# One `path::CODE::message` key per line; shrink-only.\n")
+        for key in sorted({d.baseline_key() for d in diags}):
+            fh.write(key + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LintResult:
+    diagnostics: list[Diagnostic]     # what the run reports (post filter)
+    suppressed: list[Diagnostic]      # silenced by a justified noqa
+    baselined: list[Diagnostic]       # silenced by the baseline file
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.diagnostics)
+
+
+def run_lint(paths: Sequence[str], rules: Sequence[Rule], *,
+             baseline: set[str] | None = None,
+             select: set[str] | None = None) -> LintResult:
+    project = Project(discover(paths))
+    raw: list[Diagnostic] = []
+    for rule in rules:
+        for module in project.modules:
+            raw.extend(rule.check_module(module, project))
+        raw.extend(rule.check_project(project))
+    if select:
+        raw = [d for d in raw if d.code in select]
+
+    reported: list[Diagnostic] = []
+    suppressed: list[Diagnostic] = []
+    baselined: list[Diagnostic] = []
+    baseline = baseline or set()
+    for d in sorted(set(raw)):
+        sup = _find_suppression(project, d)
+        if sup is not None and sup.covers(d.code):
+            if sup.reason:
+                suppressed.append(d)
+                continue
+            d = dataclasses.replace(
+                d, message=d.message + "  [noqa tag found but it carries "
+                "no justification — write `# noqa: "
+                f"{d.code} — <why>`]")
+        if d.baseline_key() in baseline:
+            baselined.append(d)
+            continue
+        reported.append(d)
+    return LintResult(reported, suppressed, baselined)
+
+
+def _find_suppression(project: Project,
+                      d: Diagnostic) -> Optional[Suppression]:
+    for m in project.modules:
+        if m.rel == d.path:
+            return m.noqa.get(d.line)
+    return None

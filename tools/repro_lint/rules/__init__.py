@@ -1,0 +1,24 @@
+"""Rule registry: every rule family repro-lint ships."""
+from tools.repro_lint.rules.concurrency import (BroadExceptRule,
+                                                LockDisciplineRule,
+                                                SocketTimeoutRule,
+                                                ThreadLifecycleRule)
+from tools.repro_lint.rules.consistency import MeshAxisRule, WireKindRule
+from tools.repro_lint.rules.pallas_budget import PallasBudgetRule
+from tools.repro_lint.rules.purity import JaxClosureRule, RandomnessRule
+from tools.repro_lint.rules.trace_safety import TraceSafetyRule
+
+
+def all_rules():
+    return [
+        RandomnessRule(),
+        JaxClosureRule(),
+        ThreadLifecycleRule(),
+        SocketTimeoutRule(),
+        LockDisciplineRule(),
+        BroadExceptRule(),
+        TraceSafetyRule(),
+        WireKindRule(),
+        MeshAxisRule(),
+        PallasBudgetRule(),
+    ]

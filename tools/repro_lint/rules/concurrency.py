@@ -1,0 +1,348 @@
+"""Concurrency lifecycle rules (THR / SOC / LCK / BLE).
+
+Bug classes these encode (all shipped in this repo at some point):
+
+  THR001  a ``threading.Thread`` created without ``daemon=True`` can
+          stall interpreter exit behind multiprocessing's unbounded
+          atexit join.
+  THR002  a started thread that no ``close()``/``stop()`` path ever
+          joins leaks — the prefetch/heartbeat/reader threads all had
+          to grow explicit joins.
+  SOC001  a blocking ``socket.recv``/``accept`` with no
+          ``settimeout(...)`` on that socket hangs forever when the
+          peer dies mid-frame (the PR 5 accept-loop hang, generalized).
+  LCK001  ``lock.acquire()``/``release()`` outside ``with`` leaks the
+          lock on any exception between them; justified exceptions
+          (acquire-with-timeout) carry a noqa reason.
+  BLE001  ``except Exception``/``BaseException`` needs the repo's
+          justification idiom ``# noqa: BLE001 — reason``.
+  BLE002  bare ``except:`` is forbidden outright.
+
+THR002 is a deliberately conservative dataflow analysis: it tracks each
+thread object through name/attribute bindings, ``list.append`` sinks and
+one level of helper-function summaries (``self._track_thread(t)``), then
+propagates join-reachability backwards through ``for t in threads:``
+loops and ``threads = list(self._threads)`` copies.  A thread that
+escapes into an unknown callable is assumed managed (no finding): the
+rule prefers false negatives over noise.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.repro_lint.astutil import dotted, resolve
+from tools.repro_lint.diagnostics import Diagnostic
+from tools.repro_lint.engine import ParsedModule, Project, Rule
+
+
+def _key(node: ast.AST) -> Optional[str]:
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return dotted(node)
+    return None
+
+
+def _is_thread_ctor(node: ast.Call, imports: dict[str, str]) -> bool:
+    return resolve(node.func, imports) == "threading.Thread"
+
+
+class ThreadLifecycleRule(Rule):
+    codes = ("THR001", "THR002")
+    name = "thread-lifecycle"
+    summary = "threads must be daemon AND joined by an enclosing " \
+              "close()/stop()"
+
+    def check_module(self, module: ParsedModule,
+                     project: Project) -> Iterable[Diagnostic]:
+        tree, imports, parents = module.tree, module.imports, module.parents
+        threads: list[dict] = []  # {"node", "keys", "escaped"}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_thread_ctor(node, imports):
+                daemon = any(kw.arg == "daemon"
+                             and isinstance(kw.value, ast.Constant)
+                             and kw.value.value is True
+                             for kw in node.keywords)
+                if not daemon:
+                    yield module.diag(
+                        node, "THR001",
+                        "threading.Thread without daemon=True — a "
+                        "non-daemon thread stalls interpreter exit if "
+                        "any close() path is missed")
+                keys, escaped = self._initial_binding(node, parents)
+                threads.append({"node": node, "keys": keys,
+                                "escaped": escaped})
+
+        if not threads:
+            return
+
+        summaries = _function_summaries(tree)
+        for _ in range(3):  # forward flow to a fixpoint (module is small)
+            for t in threads:
+                t["escaped"] |= _propagate_forward(tree, t["keys"],
+                                                   summaries)
+
+        joined = _joined_keys(tree)
+        for _ in range(3):  # backward join-reachability
+            _propagate_joined(tree, joined)
+
+        for t in threads:
+            node, keys = t["node"], t["keys"]
+            if t["escaped"] or (keys & joined):
+                continue
+            yield module.diag(
+                node, "THR002",
+                "started thread is never joined — no close()/stop() "
+                "path reaches it (bind it to a tracked attribute/list "
+                "that a join loop drains)")
+
+    @staticmethod
+    def _initial_binding(node: ast.Call,
+                         parents: dict[ast.AST, ast.AST]
+                         ) -> tuple[set[str], bool]:
+        parent = parents.get(node)
+        keys: set[str] = set()
+        if isinstance(parent, ast.Assign):
+            for tgt in parent.targets:
+                k = _key(tgt)
+                if k:
+                    keys.add(k)
+            return keys, False
+        if isinstance(parent, (ast.AnnAssign, ast.NamedExpr)):
+            k = _key(parent.target)
+            return ({k} if k else set()), False
+        if isinstance(parent, ast.Call):
+            func = parent.func
+            if isinstance(func, ast.Attribute) and func.attr == "append":
+                k = _key(func.value)
+                return ({k} if k else set()), k is None
+            return set(), True  # passed to an unknown callable: escapes
+        if isinstance(parent, (ast.Tuple, ast.List, ast.Dict, ast.Return)):
+            return set(), True
+        # bare `threading.Thread(...).start()` or expression statement:
+        # unbound, nothing can ever join it
+        return set(), False
+
+
+def _function_summaries(tree: ast.Module
+                        ) -> dict[str, tuple[set[str], bool]]:
+    """name -> (sink keys its params flow into, param joined directly).
+
+    One level deep, by function *name* — precise enough for the
+    ``self._track_thread(t)`` pattern this repo uses."""
+    out: dict[str, tuple[set[str], bool]] = {}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = {a.arg for a in fn.args.args} - {"self", "cls"}
+        sinks: set[str] = set()
+        joins = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "append" \
+                        and any(isinstance(a, ast.Name) and a.id in params
+                                for a in node.args):
+                    k = _key(f.value)
+                    if k:
+                        sinks.add(k)
+                elif isinstance(f, ast.Attribute) and f.attr == "join" \
+                        and isinstance(f.value, ast.Name) \
+                        and f.value.id in params:
+                    joins = True
+            elif isinstance(node, ast.Assign):
+                if isinstance(node.value, ast.Name) \
+                        and node.value.id in params:
+                    for tgt in node.targets:
+                        k = _key(tgt)
+                        if k:
+                            sinks.add(k)
+        out[fn.name] = (sinks, joins)
+    return out
+
+
+def _propagate_forward(tree: ast.Module, keys: set[str],
+                       summaries: dict[str, tuple[set[str], bool]]) -> bool:
+    """Grow `keys` with every binding the thread object flows into.
+    Returns True if the object escapes into an unknown callable or a
+    container literal (assumed managed there — prefer false negatives)."""
+    escaped = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            src = _key(node.value)
+            if src in keys:
+                for tgt in node.targets:
+                    k = _key(tgt)
+                    if k:
+                        keys.add(k)
+        elif isinstance(node, (ast.Tuple, ast.List, ast.Dict)):
+            elems = node.values if isinstance(node, ast.Dict) \
+                else node.elts
+            if any(_key(e) in keys for e in elems if e is not None):
+                escaped = True
+        elif isinstance(node, ast.Call):
+            f = node.func
+            arg_keys = {_key(a) for a in node.args}
+            kw_keys = {_key(kw.value) for kw in node.keywords}
+            if isinstance(f, ast.Attribute) and f.attr == "append" \
+                    and (arg_keys & keys):
+                k = _key(f.value)
+                if k:
+                    keys.add(k)
+            elif (arg_keys | kw_keys) & keys:
+                name = f.attr if isinstance(f, ast.Attribute) else \
+                    (f.id if isinstance(f, ast.Name) else None)
+                if name in summaries:
+                    keys.update(summaries[name][0])
+                    if summaries[name][1]:
+                        keys.add(f"<joined-by:{name}>")
+                elif name not in ("start",):
+                    escaped = True  # handed to an unknown callable
+    return escaped
+
+
+def _joined_keys(tree: ast.Module) -> set[str]:
+    joined: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "join":
+            k = _key(node.func.value)
+            if k:
+                joined.add(k)
+    # helper summaries that join their param directly
+    for fn in ast.walk(tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            params = {a.arg for a in fn.args.args}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "join" \
+                        and isinstance(node.func.value, ast.Name) \
+                        and node.func.value.id in params:
+                    joined.add(f"<joined-by:{fn.name}>")
+    return joined
+
+
+def _propagate_joined(tree: ast.Module, joined: set[str]) -> None:
+    """If the elements of a collection are joined, the collection (and
+    whatever it was copied from) is joined too."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            tgt = _key(node.target)
+            if tgt in joined:
+                k = _key(node.iter)
+                if k:
+                    joined.add(k)
+                elif isinstance(node.iter, ast.Call):
+                    for a in node.iter.args:
+                        ka = _key(a)
+                        if ka:
+                            joined.add(ka)
+        elif isinstance(node, ast.Assign):
+            tgt_joined = any(_key(t) in joined for t in node.targets)
+            if not tgt_joined:
+                continue
+            val = node.value
+            k = _key(val)
+            if k:
+                joined.add(k)
+            elif isinstance(val, ast.Call):  # threads = list(self._threads)
+                for a in val.args:
+                    ka = _key(a)
+                    if ka:
+                        joined.add(ka)
+
+
+class SocketTimeoutRule(Rule):
+    codes = ("SOC001",)
+    name = "socket-timeout"
+    summary = "blocking recv/accept needs a settimeout on that socket"
+
+    _BLOCKING = {"recv", "recv_into", "accept"}
+
+    def check_module(self, module: ParsedModule,
+                     project: Project) -> Iterable[Diagnostic]:
+        bounded: set[str] = set()
+        calls: list[tuple[ast.Call, str, str]] = []
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            recv = _key(node.func.value)
+            if recv is None:
+                continue
+            attr = node.func.attr
+            if attr == "settimeout" and node.args \
+                    and not (isinstance(node.args[0], ast.Constant)
+                             and node.args[0].value is None):
+                bounded.add(recv)
+            elif attr == "setblocking" and node.args \
+                    and isinstance(node.args[0], ast.Constant) \
+                    and node.args[0].value is False:
+                bounded.add(recv)
+            elif attr in self._BLOCKING:
+                calls.append((node, recv, attr))
+        for node, recv, attr in calls:
+            if recv in bounded:
+                continue
+            yield module.diag(
+                node, "SOC001",
+                f"blocking {recv}.{attr}() with no settimeout anywhere "
+                f"on `{recv}` — a dead peer hangs this call forever")
+
+
+class LockDisciplineRule(Rule):
+    codes = ("LCK001",)
+    name = "lock-discipline"
+    summary = "locks only via `with`; manual acquire/release needs a " \
+              "justified noqa"
+
+    def check_module(self, module: ParsedModule,
+                     project: Project) -> Iterable[Diagnostic]:
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("acquire", "release")):
+                continue
+            recv = _key(node.func.value)
+            if recv is None:
+                continue
+            leaf = recv.rsplit(".", 1)[-1].lower()
+            if "lock" not in leaf and "sem" not in leaf \
+                    and "cond" not in leaf:
+                continue
+            yield module.diag(
+                node, "LCK001",
+                f"manual {recv}.{node.func.attr}() — use `with {recv}:` "
+                "so exceptions cannot leak the lock (acquire-with-"
+                "timeout patterns justify via noqa)")
+
+
+class BroadExceptRule(Rule):
+    codes = ("BLE001", "BLE002")
+    name = "broad-except"
+    summary = "bare except forbidden; broad except needs a justification"
+
+    def check_module(self, module: ParsedModule,
+                     project: Project) -> Iterable[Diagnostic]:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield Diagnostic(
+                    module.rel, node.lineno, node.col_offset, "BLE002",
+                    "bare `except:` swallows KeyboardInterrupt and "
+                    "SystemExit — name the exception types")
+                continue
+            types = node.type.elts if isinstance(node.type, ast.Tuple) \
+                else [node.type]
+            broad = [t for t in types
+                     if dotted(t) in ("Exception", "BaseException",
+                                      "builtins.Exception",
+                                      "builtins.BaseException")]
+            if broad:
+                name = dotted(broad[0])
+                yield Diagnostic(
+                    module.rel, node.lineno, node.col_offset, "BLE001",
+                    f"broad `except {name}` — justify it with "
+                    "`# noqa: BLE001 — <why>` or narrow the types")

@@ -1,0 +1,175 @@
+"""Cross-file consistency rules (WIRE / MESH).
+
+WIRE001 — every frame kind declared in ``sampling_service/wire.py`` must
+be referenced by at least one consumer in the package (worker handles
+ASSIGN/STOP, remote handles HELLO/META/HEARTBEAT/BATCH/DONE/ERROR, ...).
+A declared-but-unhandled kind is a protocol hole: the sender can emit a
+frame every receiver treats as "unexpected command".
+
+MESH001 — every mesh-axis name a sharding rule table maps a logical axis
+to must be declared by some mesh construction (``Mesh(devs, axes)``,
+``jax.make_mesh(shape, axes)`` or an ``axes = (...)`` tuple).  A typo'd
+axis silently resolves to "replicate" at run time — the array is simply
+not sharded, with no error anywhere.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.repro_lint.astutil import dotted, str_const
+from tools.repro_lint.diagnostics import Diagnostic
+from tools.repro_lint.engine import ParsedModule, Project, Rule
+
+_WIRE_SUFFIX = "sampling_service.wire"
+
+
+class WireKindRule(Rule):
+    codes = ("WIRE001",)
+    name = "wire-kinds"
+    summary = "every declared frame kind must be handled by a consumer"
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        wire = project.find_suffix(_WIRE_SUFFIX)
+        if wire is None:
+            return
+        kinds: dict[str, ast.Assign] = {}
+        for node in wire.tree.body:
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            name = node.targets[0].id
+            value = str_const(node.value)
+            if name.isupper() and value is not None \
+                    and value.isidentifier() and value.islower():
+                kinds[name] = node
+
+        if not kinds:
+            return
+        package = wire.module_name.rsplit(".", 1)[0]
+        consumers = [m for m in project.modules
+                     if m is not wire
+                     and (m.module_name == package
+                          or m.module_name.startswith(package + "."))]
+        referenced: set[str] = set()
+        for m in consumers:
+            wire_aliases = {
+                local for local, origin in m.imports.items()
+                if origin == wire.module_name
+                or origin.endswith("." + _WIRE_SUFFIX)
+                or origin == _WIRE_SUFFIX}
+            for node in ast.walk(m.tree):
+                if isinstance(node, ast.Attribute) \
+                        and isinstance(node.value, ast.Name) \
+                        and node.value.id in wire_aliases \
+                        and node.attr in kinds:
+                    referenced.add(node.attr)
+                elif isinstance(node, ast.Name) and node.id in kinds \
+                        and m.imports.get(node.id, "").endswith(
+                            "." + node.id):
+                    referenced.add(node.id)
+        for name, node in sorted(kinds.items()):
+            if name in referenced:
+                continue
+            yield wire.diag(
+                node, "WIRE001",
+                f"frame kind {name} = \"{str_const(node.value)}\" is "
+                "declared but no consumer in the package ever references "
+                "it — dispatch would drop it as an unexpected command")
+
+
+class MeshAxisRule(Rule):
+    codes = ("MESH001",)
+    name = "mesh-axes"
+    summary = "rule-table mesh axes must be declared by a mesh"
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        declared: set[str] = set()
+        for m in project.modules:
+            declared |= _declared_axes(m)
+        tables: list[tuple[ParsedModule, str, ast.Dict]] = []
+        for m in project.modules:
+            for node in m.tree.body:
+                if isinstance(node, ast.Assign) \
+                        and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    target = node.targets[0]
+                elif isinstance(node, ast.AnnAssign) \
+                        and isinstance(node.target, ast.Name):
+                    target = node.target
+                else:
+                    continue
+                if target.id.endswith("_RULES") \
+                        and isinstance(node.value, ast.Dict):
+                    tables.append((m, target.id, node.value))
+        if not declared or not tables:
+            return
+        for module, table_name, table in tables:
+            for key_node, value in zip(table.keys, table.values):
+                logical = str_const(key_node) if key_node is not None \
+                    else "?"
+                elems = value.elts if isinstance(
+                    value, (ast.Tuple, ast.List)) else [value]
+                for e in elems:
+                    axis = str_const(e)
+                    if axis is None or axis in declared:
+                        continue
+                    yield module.diag(
+                        e, "MESH001",
+                        f"{table_name}[{logical!r}] maps to mesh axis "
+                        f"{axis!r}, which no Mesh(...) / make_mesh / "
+                        f"axes=(...) declaration defines (declared: "
+                        f"{sorted(declared)}) — it would silently "
+                        "replicate")
+
+
+def _declared_axes(module: ParsedModule) -> set[str]:
+    axes: set[str] = set()
+    consts: dict[str, str] = {}
+    for node in module.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            v = str_const(node.value)
+            if v is not None:
+                consts[node.targets[0].id] = v
+
+    def collect(node: ast.AST) -> None:
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for e in node.elts:
+                v = str_const(e)
+                if v is not None:
+                    axes.add(v)
+                elif isinstance(e, ast.Name) and e.id in consts:
+                    axes.add(consts[e.id])
+        elif isinstance(node, ast.IfExp):
+            collect(node.body)
+            collect(node.orelse)
+
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            callee = dotted(node.func) or ""
+            leaf = callee.rsplit(".", 1)[-1]
+            if leaf == "Mesh" and len(node.args) >= 2:
+                collect(node.args[1])
+            elif leaf == "make_mesh" and len(node.args) >= 2:
+                collect(node.args[1])
+            for kw in node.keywords:
+                if kw.arg in ("axis_names", "axes") \
+                        and leaf in ("Mesh", "make_mesh"):
+                    collect(kw.value)
+        elif isinstance(node, ast.Assign):
+            if any(isinstance(t, ast.Name)
+                   and t.id in ("axes", "axis_names", "mesh_axes")
+                   for t in node.targets):
+                collect(node.value)
+        elif isinstance(node, ast.arg) and node.annotation is None:
+            continue
+    # default parameter values like axes: tuple = ("data", "model")
+    for fn in ast.walk(module.tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for arg, default in zip(
+                    reversed(fn.args.args), reversed(fn.args.defaults)):
+                if arg.arg in ("axes", "axis_names"):
+                    collect(default)
+    return axes

@@ -1,0 +1,182 @@
+"""Pallas VMEM budget sanity (PAL).
+
+``kernels/dispatch.py`` enforces the VMEM budget *dynamically*: at trace
+time ``choose_e_block``/``choose_mpnn_e_block`` return 0 and the call
+routes to the jnp reference.  What nothing checked statically is the
+*registration*: a kernel whose declared worst-case operating envelope
+(``WORST_CASE_ENVELOPES``) can never fit the budget would silently never
+dispatch — benchmarked speedups would be measuring the reference.
+
+This rule re-creates the budget model without importing jax (or the
+module): it extracts the module-level constants, the pure ``_floor_pow2/
+_ceil_pow2/_fit_block/choose_*`` arithmetic helpers and the
+``WORST_CASE_ENVELOPES`` table from the AST, executes the pure functions
+in a sandbox namespace, and evaluates each registered kernel's envelope
+corner against the budget:
+
+  PAL001  a ``register(KernelEntry("name", ...))`` with no
+          ``WORST_CASE_ENVELOPES`` entry (nothing pins its budget)
+  PAL002  an envelope corner for which the kernel's own choose function
+          returns 0 — the declared worst case exceeds
+          ``VMEM_BUDGET_BYTES`` and can never dispatch
+  PAL003  an envelope entry naming no registered kernel (stale key)
+
+The choose function for each kernel is derived from its registered
+decision function (the ``choose_*`` call inside it), so the rule follows
+the registry rather than hard-coding kernel names.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.repro_lint.astutil import dotted, str_const
+from tools.repro_lint.diagnostics import Diagnostic
+from tools.repro_lint.engine import ParsedModule, Project, Rule
+
+_DISPATCH_SUFFIX = "kernels.dispatch"
+_PURE_FN_PREFIXES = ("_floor_", "_ceil_", "_fit_", "choose_")
+
+_SANDBOX_BUILTINS = {"min": min, "max": max, "int": int, "bool": bool,
+                     "float": float, "abs": abs, "len": len, "dict": dict}
+
+
+def _safe_eval(node: ast.AST, ns: dict) -> tuple[bool, object]:
+    try:
+        code = compile(ast.Expression(body=node), "<repro-lint>", "eval")
+        return True, eval(code, ns)
+    except Exception:  # noqa: BLE001 — sandbox probe: anything impure
+        #                 (jax refs, env reads) simply isn't extracted
+        return False, None
+
+
+class PallasBudgetRule(Rule):
+    codes = ("PAL001", "PAL002", "PAL003")
+    name = "pallas-budget"
+    summary = "registered kernels' worst-case envelopes must fit the " \
+              "VMEM budget"
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        mod = project.find_suffix(_DISPATCH_SUFFIX)
+        if mod is None:
+            return
+
+        # one namespace acts as the functions' __globals__, so constants
+        # and helpers see each other exactly as in the real module
+        ns: dict[str, object] = {"__builtins__": dict(_SANDBOX_BUILTINS)}
+        env_node: Optional[ast.Dict] = None
+        for node in mod.tree.body:
+            target = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                target = node.targets[0]
+            elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                    and isinstance(node.target, ast.Name):
+                target = node.target
+            if target is not None:
+                name = target.id
+                if name == "WORST_CASE_ENVELOPES" \
+                        and isinstance(node.value, ast.Dict):
+                    env_node = node.value
+                    continue
+                ok, value = _safe_eval(node.value, ns)
+                if ok:
+                    ns[name] = value
+            elif isinstance(node, ast.FunctionDef) \
+                    and node.name.startswith(_PURE_FN_PREFIXES):
+                try:
+                    fn_ast = ast.parse(ast.unparse(node))
+                    exec(compile(fn_ast, "<repro-lint>", "exec"), ns)
+                except Exception:  # noqa: BLE001 — unextractable helper
+                    #                 is treated as absent below
+                    pass
+
+        registered: dict[str, tuple[ast.Call, Optional[str]]] = {}
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and (dotted(node.func) or "").endswith("register")
+                    and node.args and isinstance(node.args[0], ast.Call)):
+                continue
+            entry = node.args[0]
+            if not entry.args:
+                continue
+            kname = str_const(entry.args[0])
+            if kname is None:
+                continue
+            decide = entry.args[3] if len(entry.args) >= 4 else None
+            decide_name = decide.id if isinstance(decide, ast.Name) \
+                else None
+            registered[kname] = (node, _choose_fn_of(mod, decide_name))
+
+        envelopes: dict[str, tuple[ast.AST, Optional[dict]]] = {}
+        if env_node is not None:
+            for k, v in zip(env_node.keys, env_node.values):
+                key = str_const(k) if k is not None else None
+                if key is None:
+                    continue
+                ok, value = _safe_eval(v, ns)
+                envelopes[key] = (k, value if ok and isinstance(value, dict)
+                                  else None)
+
+        for kname, (node, choose_name) in sorted(registered.items()):
+            keys = [k for k in envelopes
+                    if k == kname or k.startswith(kname + ":")]
+            if not keys:
+                yield mod.diag(
+                    node, "PAL001",
+                    f"kernel {kname!r} is registered with no "
+                    "WORST_CASE_ENVELOPES entry — nothing pins the "
+                    "shapes it is expected to dispatch for")
+                continue
+            choose = ns.get(choose_name) if choose_name else None
+            for key in keys:
+                key_node, params = envelopes[key]
+                if params is None:
+                    yield mod.diag(
+                        key_node, "PAL002",
+                        f"envelope {key!r} could not be evaluated as a "
+                        "pure dict of parameters")
+                    continue
+                if not callable(choose):
+                    yield mod.diag(
+                        key_node, "PAL002",
+                        f"envelope {key!r}: the choose function for "
+                        f"kernel {kname!r} could not be extracted")
+                    continue
+                try:
+                    block = choose(**params)
+                except TypeError as exc:
+                    yield mod.diag(
+                        key_node, "PAL002",
+                        f"envelope {key!r} does not match "
+                        f"{choose_name}'s signature: {exc}")
+                    continue
+                if block == 0:
+                    yield mod.diag(
+                        key_node, "PAL002",
+                        f"envelope {key!r} ({params}) exceeds the VMEM "
+                        f"budget: {choose_name} returns 0, so the "
+                        "kernel would never dispatch at its declared "
+                        "worst case")
+
+        for key, (key_node, _) in sorted(envelopes.items()):
+            base = key.split(":", 1)[0]
+            if base not in registered:
+                yield mod.diag(
+                    key_node, "PAL003",
+                    f"envelope {key!r} names no registered kernel "
+                    f"(registered: {sorted(registered)})")
+
+
+def _choose_fn_of(mod: ParsedModule,
+                  decide_name: Optional[str]) -> Optional[str]:
+    if decide_name is None:
+        return None
+    for node in mod.tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == decide_name:
+            for call in ast.walk(node):
+                if isinstance(call, ast.Call):
+                    callee = dotted(call.func) or ""
+                    if callee.startswith("choose_"):
+                        return callee
+    return None

@@ -1,0 +1,210 @@
+"""Purity/determinism rules (PUR).
+
+The whole fault-tolerance story rests on batch content being a pure
+function of ``(plan, seeds, base_seed, epoch, step)`` — that is what
+makes reassignment after a worker loss idempotent re-execution and
+restart-from-watermark exactly-once.  These rules flag the ways that
+contract quietly breaks:
+
+  PUR001  legacy global-state numpy RNG (``np.random.rand`` & co.) —
+          order-dependent, process-global, fork-hostile.  Use an
+          explicitly seeded ``np.random.Generator``.
+  PUR002  stdlib ``random.*`` — same global-state hazard.
+  PUR003  wall-clock / OS entropy (``time.time``, ``os.urandom``,
+          ``uuid.uuid4``, ``datetime.now``) inside the determinism-scoped
+          packages (``repro.data``, ``repro.sampling_service``).
+          ``time.monotonic`` / ``time.sleep`` / ``time.perf_counter``
+          stay allowed: pacing and timeouts are not data.
+  PUR004  ``np.random.default_rng()`` with no seed — fresh OS entropy on
+          every call.
+  PUR005  an (unguarded, module-level) ``jax`` import reachable from the
+          numpy-only sampler-worker children: ``sampling_service/
+          worker.py`` and everything it imports, including every parent
+          package ``__init__`` those imports execute.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Optional
+
+from tools.repro_lint.astutil import resolve
+from tools.repro_lint.diagnostics import Diagnostic
+from tools.repro_lint.engine import ParsedModule, Project, Rule
+
+_GENERATOR_API = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64",
+}
+
+_CLOCK_BANNED = {
+    "time.time", "time.time_ns", "os.urandom",
+    "uuid.uuid1", "uuid.uuid4",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "secrets.token_bytes", "secrets.token_hex", "secrets.randbits",
+    "secrets.randbelow",
+}
+
+_CLOCK_SCOPES = ("repro.data", "repro.sampling_service")
+
+_WORKER_SUFFIX = "sampling_service.worker"
+
+
+def _in_scope(module_name: str, scopes: tuple[str, ...]) -> bool:
+    for scope in scopes:
+        if module_name == scope or module_name.startswith(scope + ".") \
+                or ("." + scope + ".") in ("." + module_name + "."):
+            return True
+    return False
+
+
+class RandomnessRule(Rule):
+    codes = ("PUR001", "PUR002", "PUR003", "PUR004")
+    name = "purity-randomness"
+    summary = "global RNG state, wall clock and OS entropy are " \
+              "determinism hazards"
+
+    def __init__(self, clock_scopes: tuple[str, ...] = _CLOCK_SCOPES):
+        self.clock_scopes = clock_scopes
+
+    def check_module(self, module: ParsedModule,
+                     project: Project) -> Iterable[Diagnostic]:
+        imports = module.imports
+        clock_scoped = _in_scope(module.module_name, self.clock_scopes)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            full = resolve(node.func, imports)
+            if full is None:
+                continue
+            if full.startswith("numpy.random."):
+                fn = full.rsplit(".", 1)[1]
+                if fn == "default_rng" and not node.args \
+                        and not node.keywords:
+                    yield module.diag(
+                        node, "PUR004",
+                        "np.random.default_rng() without a seed draws OS "
+                        "entropy — pass an explicit seed (or a passed-in "
+                        "Generator)")
+                elif fn not in _GENERATOR_API:
+                    yield module.diag(
+                        node, "PUR001",
+                        f"legacy global-state RNG np.random.{fn}() — use "
+                        "a seeded np.random.Generator passed in by the "
+                        "caller")
+            elif full.startswith("random.") \
+                    and imports.get("random") == "random":
+                yield module.diag(
+                    node, "PUR002",
+                    f"stdlib {full}() uses process-global RNG state — "
+                    "use a seeded np.random.Generator")
+            elif clock_scoped and full in _CLOCK_BANNED:
+                yield module.diag(
+                    node, "PUR003",
+                    f"{full}() is wall-clock/OS entropy inside a "
+                    "determinism-scoped package — batch content must be "
+                    "a pure function of (plan, seeds, base_seed, epoch, "
+                    "step)")
+
+
+# ---------------------------------------------------------------------------
+# PUR005 — jax reachable from the sampler-worker import closure
+# ---------------------------------------------------------------------------
+
+def _module_level_imports(module: ParsedModule
+                          ) -> Iterator[tuple[str, ast.stmt, bool]]:
+    """Yield (dotted_module, node, guarded) for every import statement
+    that executes at module import time.  `guarded` covers imports under
+    ``try: ... except ImportError`` and ``if TYPE_CHECKING:`` — those do
+    not create a hard dependency.  Imports inside function bodies are
+    lazy and skipped entirely."""
+
+    def visit(stmts, guarded: bool):
+        for node in stmts:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    yield alias.name, node, guarded
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = module.module_name.split(".")
+                    base = base[:len(base) - node.level]
+                    target = ".".join(base + ([node.module]
+                                              if node.module else []))
+                else:
+                    target = node.module or ""
+                if target:
+                    yield target, node, guarded
+                    for alias in node.names:
+                        yield f"{target}.{alias.name}", node, guarded
+            elif isinstance(node, ast.Try):
+                catches_import_error = any(
+                    h.type is not None
+                    and any(n in ast.dump(h.type)
+                            for n in ("ImportError", "ModuleNotFoundError",
+                                      "Exception", "BaseException"))
+                    for h in node.handlers)
+                yield from visit(node.body, guarded or catches_import_error)
+                for h in node.handlers:
+                    yield from visit(h.body, guarded)
+                yield from visit(node.orelse, guarded)
+                yield from visit(node.finalbody, guarded)
+            elif isinstance(node, ast.If):
+                cond = ast.dump(node.test)
+                is_type_checking = "TYPE_CHECKING" in cond
+                yield from visit(node.body, guarded or is_type_checking)
+                yield from visit(node.orelse, guarded)
+            elif isinstance(node, (ast.With, ast.ClassDef)):
+                yield from visit(node.body, guarded)
+
+    yield from visit(module.tree.body, False)
+
+
+def _with_ancestors(dotted_module: str) -> Iterator[str]:
+    parts = dotted_module.split(".")
+    for i in range(1, len(parts) + 1):
+        yield ".".join(parts[:i])
+
+
+class JaxClosureRule(Rule):
+    codes = ("PUR005",)
+    name = "purity-jax-closure"
+    summary = "the sampler-worker import closure must stay numpy-only"
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        root = project.find_suffix(_WORKER_SUFFIX)
+        if root is None:
+            return
+        # BFS over the import graph with real import semantics: importing
+        # repro.core.graph_tensor also executes repro/__init__.py and
+        # repro/core/__init__.py, so ancestors join the closure.
+        chain: dict[str, tuple[str, ...]] = {root.module_name: ()}
+        queue = [root]
+        seen = {root.module_name}
+        while queue:
+            mod = queue.pop(0)
+            for target, _, guarded in _module_level_imports(mod):
+                if guarded:
+                    continue
+                for name in _with_ancestors(target):
+                    dep = project.resolve(name)
+                    if dep is None or dep.module_name in seen:
+                        continue
+                    seen.add(dep.module_name)
+                    chain[dep.module_name] = \
+                        chain[mod.module_name] + (mod.module_name,)
+                    queue.append(dep)
+        for name in sorted(seen):
+            mod = project.by_name[name]
+            for target, node, guarded in _module_level_imports(mod):
+                if guarded:
+                    continue
+                if target == "jax" or target.startswith("jax."):
+                    via = " -> ".join(chain[name] + (name,)) \
+                        or name
+                    yield mod.diag(
+                        node, "PUR005",
+                        f"unguarded `import {target.split('.')[0]}` is "
+                        "reachable from the numpy-only sampler workers "
+                        f"(import chain: {via}) — guard it with "
+                        "try/except ImportError or move it into a "
+                        "function body")
+                    break  # one finding per module is enough
