@@ -18,9 +18,18 @@
 #                        devices per process) with sampler batches over
 #                        TCP; per-rank logs land in MULTIHOST_LOG_DIR
 #                        (CI uploads them as artifacts)
+#   make smoke-serve   — GNN inference serving driver (bucket-ladder
+#                        micro-batching + caches) on 8 forced CPU devices;
+#                        exits non-zero on any steady-state recompile
 #   make bench         — the benchmark sections that write BENCH_*.json
 #   make check-bench   — snapshot committed baselines, re-run bench, fail
-#                        on >25% us_per_call regression or gate violation
+#                        on >25% us_per_call regression or gate violation;
+#                        serving p50/p99 percentiles compare at
+#                        --latency-tolerance 3.0 (step-function detector:
+#                        tail latency across boxes is noisy, the absolute
+#                        bounds live in each BENCH file's own gates)
+#   make check-bench-serve — the serve section only, against its own
+#                        baseline snapshot (what the CI serve job runs)
 #   make bench-dispatch— segment-pool dispatch benchmark only
 
 PYTHON ?= python
@@ -28,8 +37,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_BASELINE := $(or $(TMPDIR),/tmp)/repro_bench_baseline
 MULTIHOST_LOG_DIR ?= results/multihost_logs
 
-.PHONY: test test-kernels ci lint smoke smoke-multihost bench check-bench \
-    bench-dispatch
+.PHONY: test test-kernels ci lint smoke smoke-multihost smoke-serve bench \
+    check-bench check-bench-serve bench-dispatch
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -61,12 +70,17 @@ smoke-multihost:
 	    --multihost 2 --papers 320 \
 	    --multihost-log-dir $(MULTIHOST_LOG_DIR)
 
+smoke-serve:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PYTHON) examples/gnn_serve.py
+
 bench:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch
 	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only mp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only sampler_service
 	$(PYTHON) -m benchmarks.run --quick --only multihost
+	$(PYTHON) -m benchmarks.run --quick --only serve
 
 check-bench:
 	rm -rf $(BENCH_BASELINE)
@@ -81,7 +95,18 @@ check-bench:
 	    --require BENCH_dp_scaling.json \
 	    --require BENCH_mp_scaling.json \
 	    --require BENCH_segment_pool_dispatch.json \
-	    --require BENCH_multihost.json
+	    --require BENCH_multihost.json \
+	    --require BENCH_serve.json \
+	    --latency-tolerance 3.0
+
+check-bench-serve:
+	rm -rf $(BENCH_BASELINE)_serve
+	mkdir -p $(BENCH_BASELINE)_serve
+	-cp results/BENCH_serve.json $(BENCH_BASELINE)_serve/ 2>/dev/null
+	rm -f results/BENCH_serve.json
+	$(PYTHON) -m benchmarks.run --quick --only serve
+	$(PYTHON) scripts/check_bench.py --baseline $(BENCH_BASELINE)_serve \
+	    --fresh results --require BENCH_serve.json --latency-tolerance 3.0
 
 bench-dispatch:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch

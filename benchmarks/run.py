@@ -27,6 +27,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         data x model in {1x1, 2x1, 2x2, 4x2}, written to
                         results/BENCH_mp_scaling.json (gated on the
                         memory shrink)
+  serve_*             — low-latency GNN inference serving: closed-loop
+                        (cold/cached) + open-loop p50/p99 latency and
+                        sustained QPS through the GNNServer request path,
+                        written to results/BENCH_serve.json (gated:
+                        zero steady-state recompiles + absolute
+                        QPS/latency floors)
   arch_*              — per-arch roofline-derived step times (from dry-run)
 """
 from __future__ import annotations
@@ -558,8 +564,10 @@ def bench_dp_scaling(quick: bool):
         "note": "host-forced CPU devices share physical cores: the "
                 "attainable speedup is bounded by host_cores, not by the "
                 "8 mesh devices (2-core box ceiling ~2x; >=4 cores shows "
-                "the full curve)",
-        "gates": {"speedup_8dev_vs_1dev": {"min": 1.3}},
+                "the full curve; a 1-core box cannot honestly gate a "
+                "parallel speedup, so the gate floor drops to 1.0 there)",
+        "gates": {"speedup_8dev_vs_1dev":
+                  {"min": 1.3 if (os.cpu_count() or 1) >= 2 else 1.0}},
     }, indent=1))
 
 
@@ -931,6 +939,151 @@ def bench_multihost(quick: bool):
     }, indent=1))
 
 
+def bench_serve(quick: bool):
+    """Low-latency GNN inference serving (the PR-7 gate).
+
+    A `GNNServer` over synthetic MAG — on-demand seeded subgraph
+    sampling, dynamic micro-batching into the warmed bucket ladder,
+    versioned subgraph + embedding caches — measured three ways:
+
+    * closed loop, cold caches  — k clients, one outstanding request
+      each, embedding cache disabled-by-clearing: every request pays
+      sampling + batched model execution (the floor of the system);
+    * closed loop, warm caches  — same offered sequence again: repeat
+      roots resolve synchronously from the embedding cache;
+    * open loop                 — seeded-Poisson arrivals at ~50% of the
+      cold closed-loop throughput: the latency distribution including
+      queueing delay at a fixed offered rate.
+
+    Gates (the hard CI bounds; the check_bench baseline comparison of
+    p50/p99 at --latency-tolerance is the step-function detector on top):
+
+    * steady_state_recompiles == 0 — every load shape above must be
+      served entirely from the warmup-compiled ladder;
+    * conservative absolute QPS floors + a generous p99 ceiling, sized
+      ~10x off the observed numbers so only a collapse (lost jit cache,
+      accidental sync sampling on the client path) trips them."""
+    import jax
+    from repro.core import HIDDEN_STATE, mag_schema
+    from repro.core.models import vanilla_mpnn
+    from repro.data import SamplingSpecBuilder
+    from repro.data.synthetic import synthetic_mag
+    from repro.nn.layers import Linear
+    from repro.nn.module import split_params
+    from repro.orchestration import RootNodeMulticlassClassification
+    from repro.serve import (GNNServer, VersionedGraphStore, closed_loop,
+                             open_loop)
+
+    dim, n_classes = 32, 8
+    n_papers = 600 if quick else 1500
+    raw, _ = synthetic_mag(n_papers=n_papers, n_authors=n_papers // 2,
+                           n_institutions=20, n_fields=40,
+                           n_classes=n_classes, feat_dim=32)
+    store = VersionedGraphStore.wrap(raw)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    seed_op.sample(8, "cites").sample(4, "cites")
+    spec = seed_op.build()
+
+    init = Linear(32, dim)
+    gnn = vanilla_mpnn({"cites": ("paper", "paper")}, {"paper": dim},
+                       message_dim=dim, hidden_dim=dim, num_rounds=2)
+    task = RootNodeMulticlassClassification("paper", n_classes, dim)
+    head = task.head()
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = {"init": split_params(init.init(k1))[0],
+              "gnn": split_params(gnn.init(k2))[0],
+              "head": split_params(head.init(k3))[0]}
+
+    def apply_fn(p, graph):
+        g = graph.replace_features(node_sets={
+            "paper": {HIDDEN_STATE: jax.nn.relu(
+                init(p["init"], graph.node_sets["paper"]["feat"]))}})
+        g = gnn(p["gnn"], g)
+        return task.predict(p["head"], g)
+
+    t0 = time.perf_counter()
+    server = GNNServer(store, spec, apply_fn, params, feature_dim=dim,
+                       max_batch=8, batch_window_ms=1.0)
+    warmup_s = time.perf_counter() - t0
+    roots = range(min(n_papers, 400))
+    clients, per_client = 4, (25 if quick else 60)
+    try:
+        cold = closed_loop(server, roots, clients=clients,
+                           requests_per_client=per_client, seed=0)
+        warm = closed_loop(server, roots, clients=clients,
+                           requests_per_client=per_client, seed=0)
+        opened = open_loop(server, roots, qps=max(cold.qps * 0.5, 20.0),
+                           duration_s=1.0 if quick else 2.0, seed=1)
+        recompiles = server.steady_state_recompiles
+        stats = server.stats
+    finally:
+        server.close()
+
+    emit("serve_closed_loop_cold", cold.p50_ms * 1e3,
+         f"qps={cold.qps:.0f};p99_ms={cold.p99_ms:.2f};"
+         f"errors={cold.errors}")
+    emit("serve_closed_loop_cached", warm.p50_ms * 1e3,
+         f"qps={warm.qps:.0f};p99_ms={warm.p99_ms:.2f};"
+         f"hit_rate={stats.embedding_hits / max(stats.served, 1):.2f}")
+    emit("serve_open_loop", opened.p50_ms * 1e3,
+         f"qps={opened.qps:.0f};offered={opened.offered_qps:.0f};"
+         f"p99_ms={opened.p99_ms:.2f}")
+    emit("serve_steady_state_recompiles", 0.0,
+         f"recompiles={recompiles};ladder={list(server.ladder.rungs)};"
+         f"warmup_s={warmup_s:.2f}")
+
+    out_path = Path("results/BENCH_serve.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps({
+        "benchmark": "serve",
+        "workload": {"n_papers": n_papers, "feature_dim": dim,
+                     "sampling_ops": len(spec.sampling_ops),
+                     "clients": clients,
+                     "requests_per_client": per_client,
+                     "max_batch": server.ladder.max_batch,
+                     "bucket_ladder": list(server.ladder.rungs),
+                     "budget_limited": server.ladder.budget_limited},
+        "warmup_s": round(warmup_s, 3),
+        "closed_loop_cold": cold.summary(),
+        "closed_loop_cached": warm.summary(),
+        "open_loop": opened.summary(),
+        "steady_state_recompiles": recompiles,
+        "cache": {
+            "embedding_hits": stats.embedding_hits,
+            "embedding_misses": stats.embedding_misses,
+            "subgraph_hits": stats.subgraph_hits,
+            "subgraph_misses": stats.subgraph_misses,
+            "batches": stats.batches,
+            "batches_per_bucket": {str(k): v for k, v in
+                                   sorted(stats.batch_sizes.items())},
+            "mean_batch_size": round(
+                (stats.served - stats.embedding_hits)
+                / max(stats.batches, 1), 2),
+        },
+        "backend": jax.default_backend(),
+        "host_cores": os.cpu_count(),
+        "note": "closed loop: k clients, 1 outstanding each (cold = "
+                "first pass, cached = identical offered sequence again "
+                "so repeat roots hit the embedding cache); open loop: "
+                "seeded-Poisson arrivals at ~50% of cold closed-loop "
+                "throughput.  p50/p99 are wall-clock submit->fulfill "
+                "per request.  Gates are sized ~10x off observed "
+                "numbers: they catch collapse (a lost jit cache is "
+                "10-100x), while the check_bench baseline comparison "
+                "at --latency-tolerance catches drift.",
+        "gates": {
+            "steady_state_recompiles": {"max": 0},
+            "closed_loop_cold.qps": {"min": 50},
+            "closed_loop_cached.qps": {"min": 100},
+            "closed_loop_cold.p99_ms": {"max": 500},
+            "closed_loop_cold.errors": {"max": 0},
+            "closed_loop_cached.errors": {"max": 0},
+            "open_loop.errors": {"max": 0},
+        },
+    }, indent=1))
+
+
 def bench_archs(quick: bool):
     """Roofline-derived per-step seconds per (arch × shape) from dry-run."""
     path = Path("results/dryrun.json")
@@ -966,6 +1119,7 @@ def main(argv=None):
         "mp_scaling": bench_mp_scaling,
         "sampler_service": bench_sampler_service,
         "multihost": bench_multihost,
+        "serve": bench_serve,
         "archs": bench_archs,
     }
     for name, fn in sections.items():

@@ -4,38 +4,69 @@ against the committed baselines.
 
     python scripts/check_bench.py --baseline <dir> --fresh results
 
-Fails (exit 1) when any metric whose key path contains ``us_per_call``
-slowed down by more than --tolerance (default 25%) relative to the same
-metric in the baseline file of the same name, or when a file's own
-``gates`` section is violated.  New benchmark files (no baseline) and new
-metrics pass with a note — the gate protects existing numbers, it does not
-freeze the schema.
+Fails (exit 1) when any *timing metric* slowed down beyond its tolerance
+relative to the same metric in the baseline file of the same name, or
+when a file's own ``gates`` section is violated.  New benchmark files
+(no baseline) and new metrics pass with a note — the gate protects
+existing numbers, it does not freeze the schema.
 
-``gates`` lets a benchmark carry self-describing acceptance bounds::
+Timing metrics are recognised by key family, all lower-is-better:
 
-    "gates": {"speedup_8dev_vs_1dev": {"min": 1.5}}
+  * ``us_per_call``      — microseconds per call (any key containing it;
+    the family inherits to numeric leaves below, so
+    ``"us_per_call": {"1dev": ...}`` gates every entry).  Compared at
+    ``--tolerance`` (default 25%).
+  * ``p50_ms`` / ``p99_ms`` (any ``p<digits>[_digits]_ms`` percentile
+    key) — serving-latency percentiles in milliseconds.  Compared at
+    ``--latency-tolerance`` (default 100%): wall-clock tail latency on a
+    shared box is far noisier than a tight compute kernel, so the
+    baseline comparison is a step-function detector (losing a jit cache
+    is 10-100x) while each benchmark's own ``gates`` carry the hard
+    absolute bounds.
 
-keyed by dotted path into the same JSON document.
+Throughput and other higher-is-better numbers are gated via ``gates``,
+which lets a benchmark carry self-describing acceptance bounds::
+
+    "gates": {"speedup_8dev_vs_1dev": {"min": 1.5},
+              "closed_loop_cold.p99_ms": {"max": 2000}}
+
+keyed by dotted path into the same JSON document (``min`` gates
+higher-is-better metrics like QPS, ``max`` gates lower-is-better ones
+like latency or recompile counts).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 from pathlib import Path
 
+# key family -> scale to microseconds (for the --min-us noise floor)
+_PERCENTILE_MS = re.compile(r"p\d+(_\d+)?_ms$")
 
-def collect_metrics(obj, path=(), in_metric=False):
-    """(dotted_path, value) for every numeric leaf under a key containing
-    'us_per_call'."""
-    out = []
+
+def metric_family(key: str):
+    """'us' | 'ms' when `key` names a lower-is-better timing metric."""
+    if "us_per_call" in key:
+        return "us"
+    if _PERCENTILE_MS.fullmatch(key):
+        return "ms"
+    return None
+
+
+def collect_metrics(obj, path=(), family=None):
+    """{dotted_path: (value, family)} for every numeric leaf under a
+    timing-metric key (family inherits downward, so dict-valued metric
+    keys gate each of their entries)."""
+    out = {}
     if isinstance(obj, dict):
         for k, v in obj.items():
-            out += collect_metrics(v, path + (str(k),),
-                                   in_metric or "us_per_call" in str(k))
+            out.update(collect_metrics(v, path + (str(k),),
+                                       metric_family(str(k)) or family))
     elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
-        if in_metric:
-            out.append((".".join(path), float(obj)))
+        if family is not None:
+            out[".".join(path)] = (float(obj), family)
     return out
 
 
@@ -48,7 +79,7 @@ def lookup(obj, dotted):
 
 
 def check_file(fresh_path: Path, base_path: Path | None, tolerance: float,
-               min_us: float):
+               min_us: float, latency_tolerance: float):
     failures, notes = [], []
     fresh = json.loads(fresh_path.read_text())
 
@@ -67,32 +98,36 @@ def check_file(fresh_path: Path, base_path: Path | None, tolerance: float,
 
     if base_path is None or not base_path.exists():
         notes.append(f"{fresh_path.name}: no committed baseline "
-                     "(new benchmark) — us_per_call comparison skipped")
+                     "(new benchmark) — timing comparison skipped")
         return failures, notes
 
     base = json.loads(base_path.read_text())
-    base_metrics = dict(collect_metrics(base))
-    fresh_metrics = dict(collect_metrics(fresh))
-    for key, base_val in sorted(base_metrics.items()):
+    base_metrics = collect_metrics(base)
+    fresh_metrics = collect_metrics(fresh)
+    to_us = {"us": 1.0, "ms": 1000.0}
+    tol_for = {"us": tolerance, "ms": latency_tolerance}
+    for key, (base_val, family) in sorted(base_metrics.items()):
         if key not in fresh_metrics:
             failures.append(f"{fresh_path.name}: metric {key} present in "
                             "baseline but missing from fresh results")
             continue
-        fresh_val = fresh_metrics[key]
-        if base_val < min_us:
+        fresh_val, _ = fresh_metrics[key]
+        if base_val * to_us[family] < min_us:
             notes.append(f"{fresh_path.name}: {key} baseline "
-                         f"{base_val:.1f}us below --min-us, skipped")
+                         f"{base_val:.3f}{family} below --min-us, skipped")
             continue
+        tol = tol_for[family]
         ratio = fresh_val / base_val if base_val else float("inf")
         line = (f"{fresh_path.name}: {key} {base_val:.1f} -> "
-                f"{fresh_val:.1f} us ({ratio - 1.0:+.0%})")
-        if ratio > 1.0 + tolerance:
-            failures.append(line + f" exceeds {tolerance:.0%} tolerance")
+                f"{fresh_val:.1f} {family} ({ratio - 1.0:+.0%})")
+        if ratio > 1.0 + tol:
+            failures.append(line + f" exceeds {tol:.0%} tolerance")
         else:
             notes.append(line)
     for key in sorted(set(fresh_metrics) - set(base_metrics)):
+        val, family = fresh_metrics[key]
         notes.append(f"{fresh_path.name}: new metric {key} "
-                     f"({fresh_metrics[key]:.1f}us), no baseline")
+                     f"({val:.1f}{family}), no baseline")
     return failures, notes
 
 
@@ -103,10 +138,16 @@ def main(argv=None):
     ap.add_argument("--baseline", required=True,
                     help="dir with the committed baseline BENCH_*.json")
     ap.add_argument("--tolerance", type=float, default=0.25,
-                    help="allowed fractional slowdown (default 0.25)")
+                    help="allowed fractional slowdown for us_per_call "
+                         "metrics (default 0.25)")
+    ap.add_argument("--latency-tolerance", type=float, default=1.0,
+                    help="allowed fractional slowdown for p50_ms/p99_ms "
+                         "latency percentiles (default 1.0: tail latency "
+                         "on shared boxes is noisy — the absolute bounds "
+                         "live in each file's own gates)")
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="ignore baseline metrics faster than this "
-                         "(timer noise floor)")
+                         "(timer noise floor; ms metrics are converted)")
     ap.add_argument("--require", action="append", default=[],
                     metavar="BENCH_x.json",
                     help="registered benchmark files that MUST be present "
@@ -130,7 +171,7 @@ def main(argv=None):
             print(f"  FAIL {all_failures[-1]}")
     for f in fresh_files:
         failures, notes = check_file(f, base_dir / f.name, args.tolerance,
-                                     args.min_us)
+                                     args.min_us, args.latency_tolerance)
         for n in notes:
             print(f"  ok   {n}")
         for x in failures:
@@ -145,8 +186,8 @@ def main(argv=None):
     if all_failures:
         print(f"check_bench: {len(all_failures)} failure(s)")
         return 1
-    print(f"check_bench: {len(fresh_files)} file(s) within "
-          f"{args.tolerance:.0%} of baseline")
+    print(f"check_bench: {len(fresh_files)} file(s) within tolerance "
+          f"of baseline")
     return 0
 
 

@@ -122,13 +122,20 @@ class GraphStore:
         self.num_nodes = dict(num_nodes)
         # CSR-ish index per edge set for O(deg) neighbor queries
         self._index: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
-        for name, (src, tgt) in self.edges.items():
-            n_src = num_nodes[self.schema.edge_sets[name].source]
-            order = np.argsort(src, kind="stable")
-            sorted_src = src[order]
-            starts = np.searchsorted(sorted_src, np.arange(n_src))
-            ends = np.searchsorted(sorted_src, np.arange(n_src) + 1)
-            self._index[name] = (starts, ends, tgt[order])
+        for name in self.edges:
+            self._reindex(name)
+
+    def _reindex(self, name: str) -> None:
+        """(Re)build one edge set's CSR index from `self.edges[name]` —
+        the hook mutating subclasses (repro.serve.cache.VersionedGraphStore)
+        call after editing an adjacency list."""
+        src, tgt = self.edges[name]
+        n_src = self.num_nodes[self.schema.edge_sets[name].source]
+        order = np.argsort(src, kind="stable")
+        sorted_src = src[order]
+        starts = np.searchsorted(sorted_src, np.arange(n_src))
+        ends = np.searchsorted(sorted_src, np.arange(n_src) + 1)
+        self._index[name] = (starts, ends, tgt[order])
 
     def neighbors(self, edge_set: str, node: int) -> np.ndarray:
         starts, ends, tgts = self._index[edge_set]

@@ -196,6 +196,19 @@ def choose_e_block(n_segments: int, d: int, itemsize: int = 4, *,
     return _fit_block(resident, per_edge, n_edges)
 
 
+def fits_budget(n_segments: int, d: int, itemsize: int = 4, *,
+                reduce: str = "sum") -> bool:
+    """Public budget query: would a segment reduction over `n_segments`
+    targets with `d`-wide features stay inside the kernel envelope
+    (dispatch caps + a non-zero edge block under `VMEM_BUDGET_BYTES`)?
+
+    The serving bucket ladder (`repro.serve.gnn.build_ladder`) sizes its
+    largest padded batch with this — buckets past the budget would silently
+    demote every steady-state request to the reference path."""
+    return (n_segments <= MAX_SEGMENTS and d <= MAX_FEATURE_DIM
+            and choose_e_block(n_segments, d, itemsize, reduce=reduce) > 0)
+
+
 def choose_mpnn_e_block(n_src: int, n_tgt: int, ds: int, dt: int, m: int,
                         itemsize: int = 4, *,
                         n_edges: int | None = None) -> int:

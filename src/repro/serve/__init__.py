@@ -1,0 +1,51 @@
+"""repro.serve — inference serving.
+
+Two engines live here:
+
+  * ``repro.serve.engine``  — the LM continuous-batching engine
+    (compiled prefill/decode step fns; requests are data);
+  * ``repro.serve.gnn``     — the GNN request path: on-demand seeded
+    subgraph sampling, dynamic micro-batching into a fixed bucket
+    ladder of padded SizeConstraints, and versioned subgraph /
+    node-embedding caches (``repro.serve.cache``), load-tested by
+    ``repro.serve.loadgen``.
+
+PEP 562 lazy exports (mirroring ``repro.core``): importing the package
+must not drag in jax or the LM model registry — the symbol's home module
+loads on first attribute access.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "GNNServer": "repro.serve.gnn",
+    "BucketLadder": "repro.serve.gnn",
+    "build_ladder": "repro.serve.gnn",
+    "spec_size_bounds": "repro.serve.gnn",
+    "ServeRequest": "repro.serve.gnn",
+    "ServeError": "repro.serve.gnn",
+    "EngineClosed": "repro.serve.gnn",
+    "VersionedGraphStore": "repro.serve.cache",
+    "VersionedLRUCache": "repro.serve.cache",
+    "SubgraphCache": "repro.serve.cache",
+    "CacheStats": "repro.serve.cache",
+    "closed_loop": "repro.serve.loadgen",
+    "open_loop": "repro.serve.loadgen",
+    "LoadReport": "repro.serve.loadgen",
+    "ServeEngine": "repro.serve.engine",
+    "Request": "repro.serve.engine",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module_name = _EXPORTS.get(name)
+    if module_name is None:
+        raise AttributeError(f"module 'repro.serve' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(module_name), name)
+
+
+def __dir__():
+    return __all__

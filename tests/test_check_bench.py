@@ -1,0 +1,166 @@
+"""scripts/check_bench.py — the perf-regression gate's comparison
+directions.
+
+The gate handles two lower-is-better timing families (us_per_call at
+--tolerance, p50_ms/p99_ms percentiles at --latency-tolerance), dotted
+`gates` min/max bounds, and --require presence checks; each direction
+gets a test so a sign flip in the comparison can never land silently.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parent.parent / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    fresh = tmp_path / "fresh"
+    base = tmp_path / "base"
+    fresh.mkdir()
+    base.mkdir()
+    return fresh, base
+
+
+def write(d: Path, doc: dict, name: str = "BENCH_x.json") -> None:
+    (d / name).write_text(json.dumps(doc))
+
+
+def run(fresh: Path, base: Path, *extra: str) -> int:
+    return check_bench.main(["--fresh", str(fresh), "--baseline",
+                             str(base), *extra])
+
+
+# -- us_per_call family (lower is better, --tolerance) ----------------------
+
+def test_us_per_call_regression_fails(dirs):
+    fresh, base = dirs
+    write(base, {"us_per_call": {"a": 1000.0}})
+    write(fresh, {"us_per_call": {"a": 1500.0}})  # +50% > 25% tolerance
+    assert run(fresh, base) == 1
+
+
+def test_us_per_call_within_tolerance_passes(dirs):
+    fresh, base = dirs
+    write(base, {"us_per_call": {"a": 1000.0}})
+    write(fresh, {"us_per_call": {"a": 1200.0}})  # +20% < 25%
+    assert run(fresh, base) == 0
+
+
+def test_us_per_call_improvement_passes(dirs):
+    fresh, base = dirs
+    write(base, {"us_per_call": {"a": 1000.0}})
+    write(fresh, {"us_per_call": {"a": 200.0}})  # 5x faster: never a fail
+    assert run(fresh, base) == 0
+
+
+def test_min_us_noise_floor_skips_fast_metrics(dirs):
+    fresh, base = dirs
+    write(base, {"us_per_call": {"a": 10.0}})   # below the 50us floor
+    write(fresh, {"us_per_call": {"a": 40.0}})  # 4x worse but noise
+    assert run(fresh, base) == 0
+    assert run(fresh, base, "--min-us", "5") == 1  # floor lowered: fails
+
+
+# -- percentile family (lower is better, --latency-tolerance) ---------------
+
+def test_p99_regression_beyond_latency_tolerance_fails(dirs):
+    fresh, base = dirs
+    write(base, {"p99_ms": 10.0})
+    write(fresh, {"p99_ms": 25.0})  # +150% > default 100%
+    assert run(fresh, base) == 1
+
+
+def test_p99_within_latency_tolerance_passes(dirs):
+    fresh, base = dirs
+    write(base, {"p99_ms": 10.0})
+    write(fresh, {"p99_ms": 18.0})  # +80% < default 100%
+    assert run(fresh, base) == 0
+    # ...but the same drift fails when the operator tightens the knob
+    assert run(fresh, base, "--latency-tolerance", "0.5") == 1
+
+
+def test_percentiles_nested_and_improvements(dirs):
+    fresh, base = dirs
+    write(base, {"closed_loop": {"p50_ms": 4.0, "p99_ms": 12.0}})
+    write(fresh, {"closed_loop": {"p50_ms": 1.0, "p99_ms": 3.0}})
+    assert run(fresh, base) == 0  # faster is always fine
+
+
+def test_percentile_min_us_floor_is_ms_scaled(dirs):
+    fresh, base = dirs
+    # 0.02ms = 20us: under the 50us floor even though the ratio is 100x
+    write(base, {"p50_ms": 0.02})
+    write(fresh, {"p50_ms": 2.0})
+    assert run(fresh, base) == 0
+
+
+def test_qps_is_not_a_timing_metric(dirs):
+    fresh, base = dirs
+    # throughput halved: only `gates` may judge higher-is-better numbers,
+    # the timing families must not match qps/duration keys
+    write(base, {"qps": 1000.0, "duration_s": 1.0})
+    write(fresh, {"qps": 500.0, "duration_s": 2.0})
+    assert run(fresh, base) == 0
+
+
+# -- gates section (absolute bounds, both directions) ------------------------
+
+def test_gate_min_direction(dirs):
+    fresh, base = dirs
+    write(fresh, {"qps": 80.0, "gates": {"qps": {"min": 100}}})
+    assert run(fresh, base) == 1
+    write(fresh, {"qps": 150.0, "gates": {"qps": {"min": 100}}})
+    assert run(fresh, base) == 0
+
+
+def test_gate_max_direction_dotted_path(dirs):
+    fresh, base = dirs
+    write(fresh, {"serve": {"p99_ms": 700.0},
+                  "gates": {"serve.p99_ms": {"max": 500}}})
+    assert run(fresh, base) == 1
+    write(fresh, {"serve": {"p99_ms": 80.0},
+                  "gates": {"serve.p99_ms": {"max": 500}}})
+    assert run(fresh, base) == 0
+
+
+def test_gate_missing_field_fails(dirs):
+    fresh, base = dirs
+    write(fresh, {"gates": {"nope.missing": {"min": 1}}})
+    assert run(fresh, base) == 1
+
+
+# -- presence checks ---------------------------------------------------------
+
+def test_require_missing_file_fails(dirs):
+    fresh, base = dirs
+    write(fresh, {"us_per_call": {"a": 100.0}})
+    assert run(fresh, base, "--require", "BENCH_serve.json") == 1
+    write(fresh, {"p99_ms": 1.0}, name="BENCH_serve.json")
+    assert run(fresh, base, "--require", "BENCH_serve.json") == 0
+
+
+def test_baseline_metric_missing_from_fresh_fails(dirs):
+    fresh, base = dirs
+    write(base, {"us_per_call": {"a": 1000.0, "b": 1000.0}})
+    write(fresh, {"us_per_call": {"a": 1000.0}})
+    assert run(fresh, base) == 1
+
+
+def test_baseline_file_missing_from_fresh_fails(dirs):
+    fresh, base = dirs
+    write(base, {"us_per_call": {"a": 1000.0}}, name="BENCH_gone.json")
+    write(fresh, {"us_per_call": {"a": 1000.0}})
+    assert run(fresh, base) == 1
+
+
+def test_new_benchmark_without_baseline_passes(dirs):
+    fresh, base = dirs
+    write(fresh, {"us_per_call": {"a": 1000.0}, "p99_ms": 3.0})
+    assert run(fresh, base) == 0

@@ -1,0 +1,369 @@
+"""GNN inference serving: bucket ladder, versioned caches, engine
+lifecycle (repro.serve.gnn / repro.serve.cache / repro.serve.loadgen).
+
+Determinism + liveness invariants under test:
+
+* padded shapes are a pure function of the request count (bucket
+  ladder), so steady-state serving never recompiles;
+* mutating the (versioned) GraphStore bumps its version and evicts stale
+  subgraph/embedding entries — a re-served query observes the new graph;
+* close() fails pending requests with EngineClosed instead of hanging,
+  even while the engine is wedged inside the model (every blocking test
+  carries a ``timeout`` mark AND uses bounded ``result(timeout)`` waits).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.schema import (EdgeSetSpec, FeatureSpec, GraphSchema,
+                               NodeSetSpec, mag_schema)
+from repro.data.sampling import (GraphStore, SamplingSpecBuilder)
+from repro.serve.cache import (MISSING, SubgraphCache, VersionedGraphStore,
+                               VersionedLRUCache)
+from repro.serve.gnn import (EngineClosed, GNNServer, ServeError,
+                             build_ladder, spec_size_bounds)
+from repro.serve.loadgen import closed_loop, open_loop
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: a minimal controlled graph (one node set, one edge set)
+# ---------------------------------------------------------------------------
+
+def tiny_schema() -> GraphSchema:
+    return GraphSchema(
+        node_sets={"n": NodeSetSpec({"feat": FeatureSpec("float32", (4,))})},
+        edge_sets={"e": EdgeSetSpec("n", "n")})
+
+
+def tiny_store(n_nodes: int = 10) -> VersionedGraphStore:
+    """Ring graph: node i -> i+1 (mod n).  Degrees (=1) sit far below the
+    spec's sample_size, so any appended edge provably lands in the
+    resampled subgraph — the controlled case for invalidation tests."""
+    src = np.arange(n_nodes, dtype=np.int64)
+    tgt = (src + 1) % n_nodes
+    feats = np.arange(n_nodes * 4, dtype=np.float32).reshape(n_nodes, 4)
+    return VersionedGraphStore(tiny_schema(), {"e": (src, tgt)},
+                               {"n": {"feat": feats}}, {"n": n_nodes})
+
+
+def tiny_spec(schema=None, fanout: int = 4):
+    b = SamplingSpecBuilder(schema or tiny_schema())
+    b.seed("n").sample(fanout, "e")
+    return b._build()
+
+
+def sum_apply(params, graph):
+    """Deterministic, jax-free stand-in model: per-component sum of node
+    features (component-major rows, like a root readout head)."""
+    feats = np.asarray(graph.node_sets["n"]["feat"])
+    sizes = np.asarray(graph.node_sets["n"].sizes)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return np.stack([feats[s:s + c].sum(axis=0) * (params or 1.0)
+                     for s, c in zip(starts, sizes)])
+
+
+def make_server(store=None, **kwargs):
+    kwargs.setdefault("feature_dim", 4)
+    kwargs.setdefault("jit_apply", False)
+    kwargs.setdefault("max_batch", 4)
+    kwargs.setdefault("batch_window_ms", 1.0)
+    return GNNServer(store if store is not None else tiny_store(),
+                     tiny_spec(), sum_apply, 1.0, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# spec_size_bounds + bucket ladder
+# ---------------------------------------------------------------------------
+
+def test_spec_size_bounds_cover_sampled_graphs():
+    """The analytic per-request bounds dominate every actually sampled
+    subgraph (so merge_and_pad can never overflow a bucket)."""
+    from repro.data.sampling import InMemorySampler
+    from repro.data.synthetic import synthetic_mag
+
+    schema = mag_schema()
+    store, _ = synthetic_mag(n_papers=200, n_authors=100,
+                             n_institutions=10, n_fields=20)
+    b = SamplingSpecBuilder(schema)
+    seed_op = b.seed("paper")
+    seed_op.sample(8, "cites").sample(4, "cites")
+    spec = seed_op.build()
+    bounds = spec_size_bounds(spec, schema)
+    assert bounds.total_num_components == 2
+    for g in InMemorySampler(store, spec, seed=0).sample(range(50)):
+        for name, cap in bounds.total_num_nodes.items():
+            assert int(np.sum(g.node_sets[name].sizes)) <= cap
+        for name, cap in bounds.total_num_edges.items():
+            assert int(np.sum(g.edge_sets[name].sizes)) <= cap
+
+
+def test_bucket_ladder_rungs_and_selection():
+    ladder = build_ladder(spec_size_bounds(tiny_spec(), tiny_schema()),
+                          max_batch=8, feature_dim=4)
+    assert ladder.rungs == (1, 2, 4, 8)
+    assert [ladder.bucket_for(n) for n in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        ladder.bucket_for(9)
+    with pytest.raises(ValueError):
+        ladder.bucket_for(0)
+    # non-power-of-two max_batch becomes the top rung verbatim
+    assert build_ladder(spec_size_bounds(tiny_spec(), tiny_schema()),
+                        max_batch=6, feature_dim=4).rungs == (1, 2, 4, 6)
+
+
+def test_bucket_ladder_sizes_scale_with_rung():
+    base = spec_size_bounds(tiny_spec(), tiny_schema())
+    ladder = build_ladder(base, max_batch=4, feature_dim=4)
+    for rung in ladder.rungs:
+        sz = ladder.sizes[rung]
+        assert sz.total_num_components == rung + 1
+        assert sz.total_num_nodes["n"] == base.total_num_nodes["n"] * rung
+        assert sz.total_num_edges["e"] == base.total_num_edges["e"] * rung
+
+
+def test_bucket_ladder_trimmed_by_kernel_budget():
+    """A rung whose padded node capacity exceeds the dispatch VMEM
+    envelope is dropped (rung 1 always survives)."""
+    from repro.kernels import dispatch
+
+    from repro.data.batching import SizeConstraints
+    huge = SizeConstraints(total_num_components=2,
+                           total_num_nodes={"n": dispatch.MAX_SEGMENTS},
+                           total_num_edges={"e": 8})
+    ladder = build_ladder(huge, max_batch=8, feature_dim=4)
+    assert ladder.rungs == (1,)
+    assert ladder.budget_limited
+
+
+# ---------------------------------------------------------------------------
+# Versioned caches
+# ---------------------------------------------------------------------------
+
+def test_versioned_lru_hit_miss_invalidation():
+    c = VersionedLRUCache(capacity=2)
+    assert c.get("a", 0) is MISSING
+    c.put("a", 0, 1)
+    assert c.get("a", 0) == 1
+    # newer version: miss AND the stale entry is evicted
+    assert c.get("a", 1) is MISSING
+    assert c.stats.invalidations == 1
+    assert c.stats.size == 0
+    # LRU eviction at capacity
+    c.put("a", 1, 1)
+    c.put("b", 1, 2)
+    c.put("c", 1, 3)
+    assert c.get("a", 1) is MISSING
+    assert c.stats.evictions == 1
+    # sweep evicts everything not at the given version
+    c.put("d", 2, 4)  # capacity 2: inserting d LRU-evicts b -> {c, d}
+    assert c.sweep(2) == 1  # c stale; d survives
+    assert c.get("d", 2) == 4
+
+
+def test_subgraph_cache_memoizes_and_invalidates():
+    store = tiny_store()
+    cache = SubgraphCache(store, tiny_spec(), capacity=16, base_seed=0)
+    g1 = cache.get(3)
+    g2 = cache.get(3)
+    assert g2 is g1  # memoized, not re-sampled
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    cache.get(4)
+    store.add_edges("e", [3], [7])
+    g3 = cache.get(3)
+    assert g3 is not g1
+    assert cache.stats.invalidations == 2  # both roots swept eagerly
+    # ring degree 1 << fanout 4: the appended edge must appear
+    assert int(np.sum(g1.edge_sets["e"].sizes)) == 1
+    assert int(np.sum(g3.edge_sets["e"].sizes)) == 2
+
+
+def test_subgraph_cache_deterministic_draws():
+    """Cache contract: a cached subgraph is bit-identical to a fresh
+    draw at the same (version, base_seed)."""
+    store = tiny_store()
+    a = SubgraphCache(store, tiny_spec(), base_seed=7).get(2)
+    b = SubgraphCache(store, tiny_spec(), base_seed=7).get(2)
+    np.testing.assert_array_equal(np.asarray(a.node_sets["n"]["feat"]),
+                                  np.asarray(b.node_sets["n"]["feat"]))
+
+
+def test_versioned_store_wrap_and_feature_update():
+    base = GraphStore(tiny_schema(),
+                      {"e": (np.array([0], np.int64),
+                             np.array([1], np.int64))},
+                      {"n": {"feat": np.zeros((2, 4), np.float32)}},
+                      {"n": 2})
+    store = VersionedGraphStore.wrap(base)
+    assert store.version == 0
+    store.update_node_features("n", "feat", [1], np.ones(4))
+    assert store.version == 1
+    np.testing.assert_array_equal(store.node_features["n"]["feat"][1],
+                                  np.ones(4, np.float32))
+    assert store.bump_version() == 2
+
+
+# ---------------------------------------------------------------------------
+# Server: determinism, caching, lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(60)
+def test_serve_matches_direct_computation():
+    store = tiny_store()
+    with make_server(store) as server:
+        cache = SubgraphCache(store, tiny_spec(), base_seed=0)
+        for root in (0, 3, 7):
+            got = server.submit(root).result(10)
+            want = sum_apply(1.0, cache.get(root))[0]
+            np.testing.assert_allclose(np.asarray(got), want)
+
+
+@pytest.mark.timeout(60)
+def test_deterministic_bucket_selection_no_recompiles():
+    """The same concurrent request set always lands in the same bucket
+    (padded shapes deterministic), and nothing recompiles after warmup
+    — asserted via the bucket-accounting counter (jit_apply=False) and
+    via batch shapes captured from the apply hook."""
+    shapes = []
+
+    def recording_apply(params, graph):
+        shapes.append((int(np.asarray(graph.node_sets["n"].sizes).shape[0]),
+                       int(np.asarray(graph.node_sets["n"]["feat"]).shape[0])))
+        return sum_apply(params, graph)
+
+    store = tiny_store()
+    server = GNNServer(store, tiny_spec(), recording_apply, 1.0,
+                       feature_dim=4, jit_apply=False, max_batch=4,
+                       batch_window_ms=20.0, embedding_cache_size=0)
+    try:
+        warm = set(shapes)  # one shape per rung from warmup
+        assert len(warm) == len(server.ladder.rungs)
+        for trial in range(3):
+            shapes.clear()
+            reqs = [server.submit(r) for r in (1, 2, 3)]
+            for r in reqs:
+                r.result(10)
+            assert set(shapes) <= warm, \
+                f"trial {trial} produced an unwarmed shape: {shapes}"
+        assert server.steady_state_recompiles == 0
+    finally:
+        server.close()
+
+
+@pytest.mark.timeout(60)
+def test_embedding_cache_hits_and_version_invalidation():
+    store = tiny_store()
+    with make_server(store) as server:
+        first = server.submit(5)
+        v1 = np.asarray(first.result(10))
+        assert not first.cache_hit
+        again = server.submit(5)
+        np.testing.assert_array_equal(np.asarray(again.result(10)), v1)
+        assert again.cache_hit  # fulfilled synchronously from the cache
+        assert server.stats.embedding_hits == 1
+
+        store.add_edges("e", [5], [0])  # ring: adds a second out-edge
+        fresh = server.submit(5)
+        v2 = np.asarray(fresh.result(10))
+        assert not fresh.cache_hit
+        assert server.stats.invalidations > 0
+        # the new neighbour's features join the component sum
+        assert not np.allclose(v1, v2)
+
+
+@pytest.mark.timeout(60)
+def test_close_fails_pending_requests_never_hangs():
+    """Kill the engine mid-request: a request stuck behind a wedged
+    model errors with EngineClosed promptly instead of hanging."""
+    release = threading.Event()
+
+    def wedged_apply(params, graph):
+        if not release.wait(30):  # warmup passes release pre-set
+            raise RuntimeError("never released")
+        return sum_apply(params, graph)
+
+    release.set()
+    store = tiny_store()
+    server = GNNServer(store, tiny_spec(), wedged_apply, 1.0,
+                       feature_dim=4, jit_apply=False, max_batch=2,
+                       batch_window_ms=1.0, embedding_cache_size=0)
+    release.clear()  # wedge every post-warmup batch
+    req = server.submit(1)
+    time.sleep(0.1)  # let the engine pick it up and block in the model
+    t0 = time.perf_counter()
+    server.close(timeout=0.5)
+    assert time.perf_counter() - t0 < 5.0
+    with pytest.raises(EngineClosed):
+        req.result(5)
+    # post-close submissions fail fast, too
+    with pytest.raises(EngineClosed):
+        server.submit(2).result(5)
+    release.set()  # unwedge the abandoned daemon thread
+
+
+@pytest.mark.timeout(60)
+def test_engine_survives_bad_request():
+    """A failing batch fails its own requests with ServeError; the
+    engine keeps serving everyone else."""
+    store = tiny_store()
+    with make_server(store) as server:
+        bad = server.submit(10 ** 9)  # out-of-range root: sampling raises
+        with pytest.raises(ServeError):
+            bad.result(10)
+        good = server.submit(1).result(10)
+        assert np.asarray(good).shape == (4,)
+        assert server.stats.failed == 1
+
+
+@pytest.mark.timeout(60)
+def test_queue_full_fails_fast():
+    store = tiny_store()
+    server = make_server(store, warmup=False, queue_depth=1,
+                         embedding_cache_size=0)
+    try:
+        server._stop.set()  # park the engine so the queue stays full
+        server._thread.join(5)
+        server._queue.put(object())  # occupy the single slot
+        req = server.submit(1)
+        with pytest.raises(ServeError, match="queue full"):
+            req.result(5)
+    finally:
+        server._queue.get_nowait()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# Load generation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_closed_loop_report():
+    with make_server() as server:
+        rep = closed_loop(server, range(10), clients=3,
+                          requests_per_client=5, seed=0, timeout=30)
+        assert rep.mode == "closed_loop"
+        assert rep.completed == 15 and rep.errors == 0
+        assert len(rep.latencies_ms) == 15
+        assert rep.p50_ms <= rep.p99_ms
+        assert rep.qps > 0
+        s = rep.summary()
+        assert {"completed", "errors", "qps", "p50_ms", "p99_ms"} <= set(s)
+
+
+@pytest.mark.timeout(120)
+def test_open_loop_report_and_deterministic_offer():
+    with make_server() as server:
+        rep = open_loop(server, range(10), qps=200.0, duration_s=0.3,
+                        seed=3, timeout=30)
+        assert rep.mode == "open_loop"
+        assert rep.errors == 0 and rep.completed > 0
+        assert rep.offered_qps == pytest.approx(
+            rep.completed / 0.3, rel=0.01)
+        assert rep.summary()["offered_qps"] > 0
+    # the offered arrival schedule is a pure function of the seed
+    rng_a = np.random.default_rng(3)
+    rng_b = np.random.default_rng(3)
+    np.testing.assert_allclose(rng_a.exponential(1 / 200.0, size=20),
+                               rng_b.exponential(1 / 200.0, size=20))
