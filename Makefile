@@ -21,6 +21,11 @@
 #   make smoke-serve   — GNN inference serving driver (bucket-ladder
 #                        micro-batching + caches) on 8 forced CPU devices;
 #                        exits non-zero on any steady-state recompile
+#   make smoke-storage — out-of-core training driver: writes a
+#                        GraphDirectory, dials in mmap-backed sampler
+#                        workers over TCP, and asserts loss parity with
+#                        the in-memory fleet plus per-worker peak RSS
+#                        below total graph bytes
 #   make bench         — the benchmark sections that write BENCH_*.json
 #   make check-bench   — snapshot committed baselines, re-run bench, fail
 #                        on >25% us_per_call regression or gate violation;
@@ -30,6 +35,8 @@
 #                        bounds live in each BENCH file's own gates)
 #   make check-bench-serve — the serve section only, against its own
 #                        baseline snapshot (what the CI serve job runs)
+#   make check-bench-graphstore — the graphstore section only, against
+#                        its own baseline snapshot (CI storage job)
 #   make bench-dispatch— segment-pool dispatch benchmark only
 
 PYTHON ?= python
@@ -37,8 +44,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_BASELINE := $(or $(TMPDIR),/tmp)/repro_bench_baseline
 MULTIHOST_LOG_DIR ?= results/multihost_logs
 
-.PHONY: test test-kernels ci lint smoke smoke-multihost smoke-serve bench \
-    check-bench check-bench-serve bench-dispatch
+.PHONY: test test-kernels ci lint smoke smoke-multihost smoke-serve \
+    smoke-storage bench check-bench check-bench-serve \
+    check-bench-graphstore bench-dispatch
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -74,6 +82,9 @@ smoke-serve:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	    $(PYTHON) examples/gnn_serve.py
 
+smoke-storage:
+	$(PYTHON) examples/out_of_core_train.py
+
 bench:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch
 	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
@@ -81,6 +92,7 @@ bench:
 	$(PYTHON) -m benchmarks.run --quick --only sampler_service
 	$(PYTHON) -m benchmarks.run --quick --only multihost
 	$(PYTHON) -m benchmarks.run --quick --only serve
+	$(PYTHON) -m benchmarks.run --quick --only graphstore
 
 check-bench:
 	rm -rf $(BENCH_BASELINE)
@@ -97,6 +109,7 @@ check-bench:
 	    --require BENCH_segment_pool_dispatch.json \
 	    --require BENCH_multihost.json \
 	    --require BENCH_serve.json \
+	    --require BENCH_graphstore.json \
 	    --latency-tolerance 3.0
 
 check-bench-serve:
@@ -107,6 +120,18 @@ check-bench-serve:
 	$(PYTHON) -m benchmarks.run --quick --only serve
 	$(PYTHON) scripts/check_bench.py --baseline $(BENCH_BASELINE)_serve \
 	    --fresh results --require BENCH_serve.json --latency-tolerance 3.0
+
+check-bench-graphstore:
+	rm -rf $(BENCH_BASELINE)_graphstore
+	mkdir -p $(BENCH_BASELINE)_graphstore
+	-cp results/BENCH_graphstore.json $(BENCH_BASELINE)_graphstore/ \
+	    2>/dev/null
+	rm -f results/BENCH_graphstore.json
+	$(PYTHON) -m benchmarks.run --quick --only graphstore
+	$(PYTHON) scripts/check_bench.py \
+	    --baseline $(BENCH_BASELINE)_graphstore \
+	    --fresh results --require BENCH_graphstore.json \
+	    --latency-tolerance 3.0
 
 bench-dispatch:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch

@@ -33,6 +33,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         written to results/BENCH_serve.json (gated:
                         zero steady-state recompiles + absolute
                         QPS/latency floors)
+  graphstore_*        — out-of-core storage: mmap-cold vs in-memory
+                        sampling throughput, worker peak RSS vs graph
+                        bytes, and 2-shard remote-lookup sampling over
+                        loopback TCP, written to
+                        results/BENCH_graphstore.json (gated: mmap >=
+                        0.5x in-memory, RSS well below graph bytes,
+                        sharded throughput floor)
   arch_*              — per-arch roofline-derived step times (from dry-run)
 """
 from __future__ import annotations
@@ -1084,6 +1091,176 @@ def bench_serve(quick: bool):
     }, indent=1))
 
 
+def bench_graphstore(quick: bool):
+    """Out-of-core GraphStore (the storage PR's gate).
+
+    Three claims, one JSON:
+
+    * ``mmap_cold_vs_inmemory_ratio`` — Algorithm 1 sampling throughput
+      on a freshly opened `MmapGraphStore` (nothing in RAM but what the
+      pages it slices) vs the in-memory `GraphStore` on the same graph.
+      The mmap path pays page-fault + indptr-slice overhead; the gate
+      (>= 0.5x) says out-of-core sampling costs at most ~2x.
+    * ``peak_rss_over_graph_bytes`` — a subprocess opens a ~130 MB
+      GraphDirectory, samples 2-hop subgraphs, and reports its peak RSS:
+      it must stay WELL below total graph bytes (the whole point of
+      mmap-backed storage; a full materialization would show ~1x plus
+      interpreter overhead).
+    * ``sharded_2shard_subgraphs_per_s`` — end-to-end sampling through a
+      `ShardedGraphStore` whose other half lives behind a loopback
+      `GraphShardServer` (batched NBR/FEAT lookups + LRU).  A
+      conservative absolute floor: catches collapse (lost request
+      batching is 10-50x), not drift.
+    """
+    import shutil
+    import subprocess
+    import tempfile
+
+    import repro
+    from repro.core.schema import (EdgeSetSpec, FeatureSpec, GraphSchema,
+                                   NodeSetSpec, mag_schema)
+    from repro.data import InMemorySampler, SamplingSpecBuilder
+    from repro.data.sampling import GraphStore
+    from repro.data.synthetic import synthetic_mag
+    from repro.storage import (GraphShardServer, MmapGraphStore,
+                               ShardedGraphStore, graph_bytes, write_graph)
+
+    tmp = tempfile.mkdtemp(prefix="bench_graphstore_")
+    try:
+        # -- part 1+3 workload: synthetic MAG -------------------------------
+        store, _ = synthetic_mag(n_papers=2000, n_authors=1000,
+                                 n_institutions=50, n_fields=100)
+        b = SamplingSpecBuilder(mag_schema())
+        seed_op = b.seed("paper")
+        cited = seed_op.sample(8, "cites")
+        cited.join([seed_op]).sample(4, "written")
+        spec = seed_op.build()
+        roots = list(range(128 if quick else 256))
+        mag_dir = write_graph(store, os.path.join(tmp, "mag"))
+
+        def throughput(s):
+            sampler = InMemorySampler(s, spec, seed=0)
+            t0 = time.perf_counter()
+            sampler.sample(roots)
+            return len(roots) / (time.perf_counter() - t0)
+
+        inmem = throughput(store)
+        cold = throughput(MmapGraphStore(mag_dir))  # fresh open: cold index
+        ratio = cold / inmem
+        emit("graphstore_inmemory", 1e6 / inmem,
+             f"subgraphs_per_s={inmem:.1f}")
+        emit("graphstore_mmap_cold", 1e6 / cold,
+             f"subgraphs_per_s={cold:.1f};ratio_vs_inmemory={ratio:.2f}")
+
+        # -- part 2: peak RSS in a worker that only mmaps -------------------
+        n, dim, deg = 100_000, 320, 4  # ~128 MB features + ~6 MB edges
+        rng = np.random.default_rng(0)
+        big_schema = GraphSchema(
+            node_sets={"n": NodeSetSpec({"x": FeatureSpec("float32",
+                                                          (dim,))})},
+            edge_sets={"e": EdgeSetSpec("n", "n")})
+        src = np.repeat(np.arange(n, dtype=np.int64), deg)
+        tgt = rng.integers(0, n, n * deg)
+        big = GraphStore(big_schema, {"e": (src, tgt)},
+                         {"n": {"x": rng.normal(size=(n, dim)).astype(
+                             np.float32)}}, {"n": n})
+        big_dir = write_graph(big, os.path.join(tmp, "big"))
+        del big, src, tgt
+        total = graph_bytes(big_dir)
+        code = (
+            "import resource, sys\n"
+            "import numpy as np\n"
+            "from repro.data.sampling import InMemorySampler, "
+            "SamplingSpecBuilder\n"
+            "from repro.storage import MmapGraphStore\n"
+            "store = MmapGraphStore(sys.argv[1], gather_chunk_rows=16)\n"
+            "b = SamplingSpecBuilder(store.schema)\n"
+            "s = b.seed('n')\n"
+            "s.sample(8, 'e').sample(8, 'e')\n"
+            "InMemorySampler(store, s.build(), seed=0).sample("
+            "list(range(64)))\n"
+            "print(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss"
+            " * 1024)\n")
+        env = dict(os.environ)
+        # namespace package: __path__ (not __file__) locates src/
+        src_root = str(Path(list(repro.__path__)[0]).resolve().parent)
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH",
+                                                            "")
+        # the measured process is a sampler host: numpy-only by contract
+        env["REPRO_NO_JAX"] = "1"
+        # fork from THIS (jax-sized) process would inflate the child's
+        # ru_maxrss with the pre-exec CoW window — measure via a tiny
+        # relay so the sampled process forks off a few-MB parent
+        env["MEASURE_CODE"] = code
+        relay = ("import os, subprocess, sys; "
+                 "r = subprocess.run([sys.executable, '-c', "
+                 "os.environ.pop('MEASURE_CODE'), sys.argv[1]], "
+                 "capture_output=True, text=True); "
+                 "sys.stdout.write(r.stdout); "
+                 "sys.stderr.write(r.stderr); "
+                 "sys.exit(r.returncode)")
+        out = subprocess.run([sys.executable, "-c", relay, big_dir],
+                             capture_output=True, text=True, env=env,
+                             timeout=300, check=True)
+        peak_rss = int(out.stdout.strip())
+        rss_ratio = peak_rss / total
+        emit("graphstore_worker_peak_rss", 0.0,
+             f"rss_mb={peak_rss / 2**20:.0f};graph_mb={total / 2**20:.0f};"
+             f"ratio={rss_ratio:.2f}")
+
+        # -- part 3: 2-shard remote-lookup throughput -----------------------
+        server = GraphShardServer(MmapGraphStore(mag_dir))
+        sharded = ShardedGraphStore(MmapGraphStore(mag_dir), 0, 2,
+                                    {1: server.address})
+        try:
+            sh_thr = throughput(sharded)
+        finally:
+            sharded.close()
+            server.close()
+        emit("graphstore_sharded_2shard", 1e6 / sh_thr,
+             f"subgraphs_per_s={sh_thr:.1f};"
+             f"remote={sharded.stats['remote']};"
+             f"cache_hits={sharded.stats['cache_hits']}")
+
+        out_path = Path("results/BENCH_graphstore.json")
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps({
+            "benchmark": "graphstore",
+            "workload": {"n_papers": 2000, "roots": len(roots),
+                         "sampling_ops": len(spec.sampling_ops),
+                         "rss_graph": {"nodes": n, "feat_dim": dim,
+                                       "degree": deg}},
+            "subgraphs_per_s": {"inmemory": inmem, "mmap_cold": cold,
+                                "sharded_2shard": sh_thr},
+            "mmap_cold_vs_inmemory_ratio": ratio,
+            "worker_peak_rss_bytes": peak_rss,
+            "graph_bytes": total,
+            "peak_rss_over_graph_bytes": rss_ratio,
+            "sharded_2shard_subgraphs_per_s": sh_thr,
+            "shard_lookups": dict(sharded.stats),
+            "host_cores": os.cpu_count(),
+            "note": "mmap_cold: a freshly opened MmapGraphStore (indices "
+                    "and features load on fault, never into python "
+                    "arrays).  peak RSS: a subprocess samples 64 2-hop "
+                    "subgraphs from a ~134 MB GraphDirectory with the "
+                    "bounded gather (gather_chunk_rows=16, MADV_DONTNEED "
+                    "between chunks — on large-folio kernels every "
+                    "touched row otherwise pins a 2 MiB folio); RSS "
+                    "covers interpreter+numpy plus one chunk window.  "
+                    "sharded: half of every frontier is "
+                    "remote over loopback TCP with batched lookups and "
+                    "an LRU; the floor is ~10x under typical observed "
+                    "throughput.",
+            "gates": {
+                "mmap_cold_vs_inmemory_ratio": {"min": 0.5},
+                "peak_rss_over_graph_bytes": {"max": 0.75},
+                "sharded_2shard_subgraphs_per_s": {"min": 25},
+            },
+        }, indent=1))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def bench_archs(quick: bool):
     """Roofline-derived per-step seconds per (arch × shape) from dry-run."""
     path = Path("results/dryrun.json")
@@ -1120,6 +1297,7 @@ def main(argv=None):
         "sampler_service": bench_sampler_service,
         "multihost": bench_multihost,
         "serve": bench_serve,
+        "graphstore": bench_graphstore,
         "archs": bench_archs,
     }
     for name, fn in sections.items():

@@ -1,0 +1,203 @@
+"""Out-of-core training driver — the graph lives on DISK, not in any
+training or sampling process:
+
+  GraphStore -> write_graph -> GraphDirectory (mmap-able .npy CSR +
+  feature files) -> a dial-in sampler fleet (`python -m
+  repro.storage.worker`) that knows only (service address, directory
+  path) -> SamplingService(backend="dial") -> runner.run.
+
+Two runs, one assertion: the dial fleet (subprocess workers, mmap +
+2-shard remote lookups, bounded-RSS gathers) must train to EXACTLY the
+same loss as an in-memory thread fleet on the same plan and seeds —
+batches are bit-identical, so the loss trajectory is too.  On top of
+loss parity the driver asserts the out-of-core claim itself: every
+worker's peak RSS (written via --rss-file) stays BELOW the total bytes
+of the GraphDirectory it sampled from.
+
+    PYTHONPATH=src python examples/out_of_core_train.py
+
+Worker processes are spawned through a tiny relay interpreter: a child
+forked from this (jax-sized) process would inherit the parent's
+pre-exec CoW window in its ru_maxrss and the RSS assertion would
+measure the trainer, not the worker.  They also run REPRO_NO_JAX=1 —
+sampler hosts are numpy-only by contract (repro-lint PUR005), and the
+env var keeps an installed jax from being imported through
+repro.core.graph_tensor's guarded fallback.
+"""
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--papers", type=int, default=24_000)
+ap.add_argument("--feat-dim", type=int, default=1024)
+ap.add_argument("--roots", type=int, default=64)
+ap.add_argument("--steps", type=int, default=6)
+ap.add_argument("--hidden", type=int, default=32)
+ap.add_argument("--workers", type=int, default=2)
+ap.add_argument("--gather-chunk-rows", type=int, default=8,
+                help="bounded-RSS gather window in the dial workers")
+args = ap.parse_args()
+
+import jax
+
+from repro.core import HIDDEN_STATE, mag_schema
+from repro.core.models import vanilla_mpnn
+from repro.data import (InMemorySampler, SamplingSpecBuilder,
+                        find_size_constraints)
+from repro.data.synthetic import synthetic_mag
+from repro.nn.layers import Embedding, Linear
+from repro.nn.module import Module
+from repro.orchestration import RootNodeMulticlassClassification, run
+from repro.sampling_service import SamplingService
+from repro.storage import graph_bytes, write_graph
+
+# 1. the graph — big enough that "peak RSS below graph bytes" means
+# something (paper features dominate: papers x feat_dim x 4 bytes)
+schema = mag_schema()
+store, _ = synthetic_mag(n_papers=args.papers,
+                         n_authors=args.papers // 4,
+                         n_institutions=40, n_fields=80,
+                         n_classes=8, feat_dim=args.feat_dim)
+
+b = SamplingSpecBuilder(schema)
+seed_op = b.seed("paper")
+cited = seed_op.sample(6, "cites")
+cited.join([seed_op]).sample(4, "written")
+spec = seed_op.build()
+
+roots = list(range(args.roots))
+bs = 8
+sizes = find_size_constraints(
+    InMemorySampler(store, spec, seed=0).sample(roots), bs)
+
+# 2. model + task (a small §8-style MPNN; features enter via one Linear)
+dim = args.hidden
+# only the edge/node sets the sampling spec reaches appear in batches
+edges = {name: (es.source, es.target)
+         for name, es in schema.edge_sets.items()
+         if name in ("cites", "written")}
+gnn = vanilla_mpnn(edges, {"paper": dim, "author": dim},
+                   message_dim=dim, hidden_dim=dim, num_rounds=2)
+
+
+class InitStates(Module):
+    """Paper features -> hidden states; id-embedding tables for the
+    feature-less node sets (the §8.1 MapFeatures analogue)."""
+
+    def __init__(self):
+        self.paper = Linear(args.feat_dim, dim)
+        # only node sets the sampling spec actually reaches
+        self.tables = {"author": Embedding(4096, dim)}
+
+    def init(self, key):
+        ks = jax.random.split(key, 1 + len(self.tables))
+        p = {"paper": self.paper.init(ks[0])}
+        for i, (n, t) in enumerate(sorted(self.tables.items())):
+            p[n] = t.init(ks[i + 1])
+        return p
+
+    def __call__(self, params, graph):
+        ns = {"paper": {HIDDEN_STATE: jax.nn.relu(self.paper(
+            params["paper"], graph.node_sets["paper"]["feat"]))}}
+        for n, t in self.tables.items():
+            ids = graph.node_sets[n]["id"] % 4096
+            ns[n] = {HIDDEN_STATE: t(params[n], ids,
+                                     dtype=jax.numpy.float32)}
+        return graph.replace_features(node_sets=ns)
+
+
+task = RootNodeMulticlassClassification("paper", 8, dim)
+
+
+def root_labels(graph):
+    """Per-group root labels [R, C] from a stacked super-batch."""
+    arr = np.asarray(graph.node_sets["paper"].sizes)       # [R, C]
+    lab = np.asarray(graph.node_sets["paper"]["labels"])   # [R, cap]
+    return np.stack([
+        RootNodeMulticlassClassification.root_labels(arr[r], lab[r])
+        for r in range(arr.shape[0])
+    ]).astype(np.int32)
+
+
+run_kwargs = dict(model_fn=lambda: (InitStates(), gnn), task=task,
+                  epochs=2, learning_rate=3e-3, total_steps=100,
+                  ckpt_dir="", log_every=4, max_steps=args.steps,
+                  num_devices=1, sampler="service", label_fn=root_labels)
+
+
+def train_with(svc):
+    return run(service=svc, **run_kwargs)
+
+
+# 3. run A — in-memory thread fleet (the reference)
+with SamplingService(store, spec, roots, batch_size=bs, sizes=sizes,
+                     num_workers=args.workers, num_replicas=1, seed=0,
+                     base_seed=0, backend="thread") as svc:
+    ref = train_with(svc)
+print(f"in-memory fleet: loss {ref.train_loss:.6f} "
+      f"({ref.step} steps)", flush=True)
+
+# 4. run B — the SAME training stream from an out-of-core dial fleet
+with tempfile.TemporaryDirectory(prefix="out_of_core_") as tmp:
+    gdir = write_graph(store, os.path.join(tmp, "graph"))
+    total = graph_bytes(gdir)
+    print(f"GraphDirectory: {total / 2**20:.0f} MB at {gdir}", flush=True)
+
+    procs, rss_files = [], []
+    # fork+exec from a small relay so each worker's ru_maxrss starts at
+    # a bare interpreter, not this process's CoW window
+    relay = "import subprocess, sys; sys.exit(subprocess.call(sys.argv[1:]))"
+    src_root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ, REPRO_NO_JAX="1",
+               PYTHONPATH=src_root + os.pathsep +
+               os.environ.get("PYTHONPATH", ""))
+
+    def spawn_workers(address):
+        host, port = address
+        for w in range(args.workers):
+            rss = os.path.join(tmp, f"worker{w}.rss")
+            rss_files.append(rss)
+            procs.append(subprocess.Popen(
+                [sys.executable, "-c", relay,
+                 sys.executable, "-m", "repro.storage.worker",
+                 "--connect", f"{host}:{port}", "--graph-dir", gdir,
+                 "--gather-chunk-rows", str(args.gather_chunk_rows),
+                 "--rss-file", rss], env=env))
+
+    svc = SamplingService(None, spec, roots, batch_size=bs, sizes=sizes,
+                          num_workers=args.workers, num_replicas=1,
+                          seed=0, base_seed=0, backend="dial",
+                          num_shards=args.workers, accept_timeout=120.0,
+                          on_listen=spawn_workers)
+    try:
+        got = train_with(svc)
+    finally:
+        svc.close()
+        for p in procs:
+            p.wait(30.0)
+
+    print(f"dial fleet:      loss {got.train_loss:.6f} "
+          f"({got.step} steps)", flush=True)
+    assert got.step == ref.step
+    assert got.train_loss == ref.train_loss, (
+        f"out-of-core loss {got.train_loss!r} != "
+        f"in-memory loss {ref.train_loss!r}")
+
+    for w, rss_file in enumerate(rss_files):
+        with open(rss_file) as f:
+            peak = int(f.read())
+        ratio = peak / total
+        print(f"worker {w}: peak RSS {peak / 2**20:.0f} MB / "
+              f"graph {total / 2**20:.0f} MB (ratio {ratio:.2f})",
+              flush=True)
+        assert peak < total, (
+            f"worker {w} peak RSS {peak} >= graph bytes {total} — "
+            "not out-of-core")
+
+print("out_of_core_train OK")

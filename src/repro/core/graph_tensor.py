@@ -21,11 +21,18 @@ order).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Mapping, Optional, Sequence
 
 import numpy as np
 
-try:  # trainer processes have jax; sampler workers must not need it
+try:  # trainer processes have jax; sampler workers must not need it.
+    # REPRO_NO_JAX=1 opts a process into the numpy-only fallback even
+    # when jax IS installed — sampler workers (fork or dial-in) set it
+    # to keep their RSS at interpreter+numpy+touched-pages instead of
+    # paying a few hundred MB for an accelerator runtime they never use.
+    if os.environ.get("REPRO_NO_JAX"):
+        raise ImportError("jax disabled by REPRO_NO_JAX")
     import jax
     import jax.numpy as jnp
 except ImportError:  # pragma: no cover — exercised by the jax-blocked

@@ -27,7 +27,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.graph_tensor import GraphTensor, stack_graphs
+from repro.core.graph_tensor import (Adjacency, EdgeSet, GraphTensor,
+                                     stack_graphs)
 from repro.data.batching import SizeConstraints, merge_graphs, pad_to_sizes
 
 
@@ -50,6 +51,15 @@ class BatchPlan:
       component groups (the super-batch layout
       `repro.distributed.graph_sharding` shards over the mesh);
       ``None`` keeps the legacy one-scalar-batch contract.
+    * ``edges_sorted_by_target`` — ask every producer to emit merged
+      batches with each edge set's edges sorted by target id (stable,
+      within each component, hence globally since component node-id
+      offsets are monotone).  Pure reordering of the same edge multiset
+      — message passing is permutation-invariant over edges — but it is
+      the layout bit the kernel dispatch layer needs to pick
+      contiguous-run segment reductions, and the on-disk CSR converter
+      (`repro.storage.write_graph`) records when a store already ships
+      it for free.
     """
 
     batch_size: int
@@ -57,6 +67,7 @@ class BatchPlan:
     rank: int = 0
     world: int = 1
     num_replicas: Optional[int] = None
+    edges_sorted_by_target: bool = False
 
     def __post_init__(self):
         if self.batch_size % self.world:
@@ -95,10 +106,45 @@ class BatchPlan:
         return order[lo:lo + self.per_rank]
 
 
-def merge_and_pad(graphs: Sequence[GraphTensor],
-                  sizes: SizeConstraints) -> GraphTensor:
-    """One component group: merge (each graph -> one component) + pad."""
-    return pad_to_sizes(merge_graphs(graphs), sizes)
+def sort_edges_by_target(graph: GraphTensor) -> GraphTensor:
+    """Stable-sort every edge set of a merged (unpadded) scalar graph by
+    (component, target id).  Component node-id offsets are monotone, so
+    the result is also globally non-decreasing in target — the layout
+    segment reductions can scan as contiguous runs.
+
+    Edge sets whose adjacency arrays carry dummy slots (an input graph
+    with 0 valid edges still contributes 1 array slot, so
+    ``len(src) != sizes.sum()``) are left untouched: their segmentation
+    is not recoverable here.  The check is a pure function of the data,
+    so every producer skips (or sorts) identically."""
+    edge_sets = {}
+    for name, es in graph.edge_sets.items():
+        src = np.asarray(es.adjacency.source)
+        tgt = np.asarray(es.adjacency.target)
+        sizes = np.asarray(es.sizes)
+        if len(src) != int(sizes.sum()):
+            edge_sets[name] = es
+            continue
+        comp = np.repeat(np.arange(len(sizes)), sizes)
+        order = np.lexsort((tgt, comp))  # stable; primary comp, then tgt
+        edge_sets[name] = EdgeSet(
+            es.sizes,
+            Adjacency(src[order], tgt[order],
+                      es.adjacency.source_name, es.adjacency.target_name),
+            {k: np.asarray(v)[order] for k, v in es.features.items()},
+            es.capacity)
+    return GraphTensor(graph.context, dict(graph.node_sets), edge_sets)
+
+
+def merge_and_pad(graphs: Sequence[GraphTensor], sizes: SizeConstraints, *,
+                  sort_by_target: bool = False) -> GraphTensor:
+    """One component group: merge (each graph -> one component),
+    optionally reorder edges per `BatchPlan.edges_sorted_by_target`,
+    then pad."""
+    merged = merge_graphs(graphs)
+    if sort_by_target:
+        merged = sort_edges_by_target(merged)
+    return pad_to_sizes(merged, sizes)
 
 
 def step_size_constraints(plan: BatchPlan,
@@ -130,9 +176,10 @@ def build_batch(graphs: Sequence[GraphTensor], plan: BatchPlan,
         raise ValueError(f"expected {plan.per_rank} graphs for one step, "
                          f"got {len(graphs)}")
     if plan.num_replicas is None:
-        return merge_and_pad(graphs, sizes)
+        return merge_and_pad(graphs, sizes,
+                             sort_by_target=plan.edges_sorted_by_target)
     groups = [
         merge_and_pad(graphs[r * plan.per_group:(r + 1) * plan.per_group],
-                      sizes)
+                      sizes, sort_by_target=plan.edges_sorted_by_target)
         for r in range(plan.num_replicas)]
     return stack_graphs(groups)

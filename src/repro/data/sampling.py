@@ -120,10 +120,12 @@ class GraphStore:
         self.edges = dict(edges)
         self.node_features = {k: dict(v) for k, v in node_features.items()}
         self.num_nodes = dict(num_nodes)
-        # CSR-ish index per edge set for O(deg) neighbor queries
+        # CSR-ish index per edge set for O(deg) neighbor queries, built
+        # lazily on first `neighbors` touch: a wide heterogeneous store
+        # only pays the argsort for the edge sets a spec actually
+        # samples (opening OGBN-MAG to sample `cites` must not index
+        # `affiliated_with`)
         self._index: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
-        for name in self.edges:
-            self._reindex(name)
 
     def _reindex(self, name: str) -> None:
         """(Re)build one edge set's CSR index from `self.edges[name]` —
@@ -138,8 +140,30 @@ class GraphStore:
         self._index[name] = (starts, ends, tgt[order])
 
     def neighbors(self, edge_set: str, node: int) -> np.ndarray:
-        starts, ends, tgts = self._index[edge_set]
+        idx = self._index.get(edge_set)
+        if idx is None:
+            self._reindex(edge_set)
+            idx = self._index[edge_set]
+        starts, ends, tgts = idx
         return tgts[starts[node]:ends[node]]
+
+    def neighbors_batch(self, edge_set: str,
+                        nodes: Sequence[int]) -> list[np.ndarray]:
+        """Neighbor lists for `nodes`, in order.  The frontier-expansion
+        hook: partitioned stores (repro.storage.ShardedGraphStore)
+        override this to batch cross-shard lookups into one request per
+        peer instead of one round-trip per node."""
+        return [self.neighbors(edge_set, int(u)) for u in nodes]
+
+    def gather_node_features(self, node_set: str,
+                             ids: np.ndarray) -> dict[str, np.ndarray]:
+        """Feature rows for `ids` of one node set.  Overridable for the
+        same reason as `neighbors_batch`; the default serves any store
+        whose `node_features` arrays are locally indexable (in-memory or
+        mmap)."""
+        ids = np.asarray(ids, np.int64)
+        return {k: np.asarray(np.asarray(v)[ids])
+                for k, v in self.node_features.get(node_set, {}).items()}
 
 
 def sample_subgraph(store: GraphStore, spec: SamplingSpec, seed: int,
@@ -157,8 +181,8 @@ def sample_subgraph(store: GraphStore, spec: SamplingSpec, seed: int,
             op_nodes[name] for name in op.input_op_names]))
         out_nodes = []
         es = store.schema.edge_sets[op.edge_set_name]
-        for u in frontier:
-            nbrs = store.neighbors(op.edge_set_name, int(u))
+        for u, nbrs in zip(frontier,
+                           store.neighbors_batch(op.edge_set_name, frontier)):
             if len(nbrs) == 0:
                 continue
             if len(nbrs) > op.sample_size:
@@ -194,8 +218,7 @@ def sample_subgraph(store: GraphStore, spec: SamplingSpec, seed: int,
     node_sets = {}
     for ns_name, id_map in id_maps.items():
         gids = np.fromiter(id_map.keys(), np.int64, len(id_map))
-        feats = {k: np.asarray(v)[gids]
-                 for k, v in store.node_features.get(ns_name, {}).items()}
+        feats = store.gather_node_features(ns_name, gids)
         node_sets[ns_name] = NodeSet(
             np.asarray([len(gids)], np.int32), feats, len(gids))
     edge_sets = {}

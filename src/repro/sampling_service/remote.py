@@ -48,6 +48,47 @@ from repro.sampling_service.transport import Address, TcpTransport
 _END = object()
 
 
+class _ReplayWindow:
+    """Per-rank bounded cache of the most recent encoded BATCH frames.
+
+    A flapping client resumes with HELLO ``start = watermark + 1``; when
+    the requested steps are still in this window the endpoint re-serves
+    the cached frame BYTES instead of resampling the batches — the
+    determinism contract makes both bit-identical, the cache just skips
+    the sampling work.  One epoch at a time (a resume never crosses an
+    epoch boundary), capacity-bounded, and only ever touched while the
+    rank's stream lock is held — so no locking of its own."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.epoch: Optional[int] = None
+        self.frames: "dict[int, bytes]" = {}
+        self.replayed = 0  # steps served from cache (stats/tests)
+
+    def put(self, epoch: int, step: int, frame: bytes) -> None:
+        if self.capacity <= 0:
+            return
+        if epoch != self.epoch:
+            self.epoch = epoch
+            self.frames = {}
+        self.frames[step] = frame
+        while len(self.frames) > self.capacity:
+            del self.frames[min(self.frames)]
+
+    def take(self, epoch: int, start: int) -> list[bytes]:
+        """Cached frames for the CONTIGUOUS run start, start+1, ... —
+        a hole means the rest must be produced live anyway, and serving
+        a non-prefix from cache would reorder the stream."""
+        if epoch != self.epoch:
+            return []
+        out = []
+        step = start
+        while step in self.frames:
+            out.append(self.frames[step])
+            step += 1
+        return out
+
+
 def source_num_steps(source) -> int:
     """Steps per epoch of a batch source (GraphBatcher / SamplingService /
     anything exposing the shared contract)."""
@@ -80,10 +121,16 @@ class SamplerEndpoint:
     def __init__(self, source_factory: Callable[[int], object], *,
                  transport: Optional[TcpTransport] = None, port: int = 0,
                  heartbeat_interval: float = 0.5,
-                 hello_timeout: float = 300.0):
+                 hello_timeout: float = 300.0, replay_steps: int = 8):
         self._source_factory = source_factory
         self._sources: dict[int, object] = {}
         self._rank_locks: dict[int, threading.Lock] = {}
+        # per-rank step-range replay cache: a client resuming from its
+        # watermark re-serves recent batches from memory instead of
+        # resampling them (replay_steps=0 disables; memory cost is up to
+        # replay_steps encoded frames per rank)
+        self.replay_steps = replay_steps
+        self._replay: dict[int, _ReplayWindow] = {}
         self._conns: dict[int, socket.socket] = {}
         self._lock = threading.Lock()
         self.heartbeat_interval = heartbeat_interval
@@ -105,7 +152,10 @@ class SamplerEndpoint:
         # socket does NOT wake a thread blocked in accept() on it (the
         # kernel wait is on the file description, not the fd), so a
         # purely-blocking accept would leak this thread at shutdown
-        self._lsock.settimeout(0.25)
+        try:
+            self._lsock.settimeout(0.25)
+        except OSError:
+            return  # close() won the race before the first poll
         while not self._closed.is_set():
             try:
                 conn, _ = self._lsock.accept()
@@ -133,7 +183,14 @@ class SamplerEndpoint:
             if rank not in self._sources:
                 self._sources[rank] = self._source_factory(rank)
                 self._rank_locks[rank] = threading.Lock()
+                self._replay[rank] = _ReplayWindow(self.replay_steps)
             return self._sources[rank], self._rank_locks[rank]
+
+    def replay_stats(self) -> dict[int, int]:
+        """Per-rank count of steps served from the replay cache."""
+        with self._lock:
+            return {rank: win.replayed
+                    for rank, win in self._replay.items()}
 
     def _adopt(self, rank: int, conn: socket.socket) -> None:
         """Make `conn` the rank's single live connection; closing the old
@@ -208,8 +265,11 @@ class SamplerEndpoint:
 
     def _stream_epoch(self, conn: socket.socket, rank: int, source,
                       epoch: int, start: int) -> None:
-        """META, then BATCH frames from `start`, then DONE — with a
-        heartbeat pump covering every production gap."""
+        """META, then BATCH frames from `start` — recent steps replayed
+        from the rank's cache, the rest produced live — then DONE, with a
+        heartbeat pump covering every production gap.  Runs under the
+        rank lock, which is also what makes the replay window safe to
+        touch without its own locking."""
         send_lock = threading.Lock()
         wire.send_frame(conn, wire.META,
                         {"epoch": epoch,
@@ -228,21 +288,36 @@ class SamplerEndpoint:
                               name=f"sampler-endpoint-hb-{rank}")
         hb.start()
         self._track_thread(hb)
-        step = start - 1
-        stream = source.epoch(epoch, start_step=start)
+        with self._lock:
+            win = self._replay.get(rank)
+        cached = win.take(epoch, start) if win is not None else []
+        stream = None
         try:
-            for step, batch in enumerate(stream, start):
+            for frame in cached:
                 if not self._owns(rank, conn) or self._closed.is_set():
                     raise OSError("connection superseded")
                 with send_lock:
-                    wire.send_frame(conn, wire.BATCH,
-                                    {"epoch": epoch, "step": step}, batch)
+                    conn.sendall(frame)
+                win.replayed += 1
+            live_start = start + len(cached)
+            step = live_start - 1
+            stream = source.epoch(epoch, start_step=live_start)
+            for step, batch in enumerate(stream, live_start):
+                if not self._owns(rank, conn) or self._closed.is_set():
+                    raise OSError("connection superseded")
+                frame = wire.encode_frame(wire.BATCH,
+                                          {"epoch": epoch, "step": step},
+                                          batch)
+                with send_lock:
+                    conn.sendall(frame)
+                if win is not None:
+                    win.put(epoch, step, frame)
             with send_lock:
                 wire.send_frame(conn, wire.DONE,
                                 {"epoch": epoch, "step": step})
         finally:
             hb_stop.set()
-            if hasattr(stream, "close"):
+            if stream is not None and hasattr(stream, "close"):
                 stream.close()  # a generator source left mid-epoch
 
     # -- lifecycle -----------------------------------------------------------

@@ -13,9 +13,14 @@ iterator through a `StreamClient` + `Coordinator`.
     service.close()
 
 Backends: ``"process"`` (default; `fork` multiprocessing — samplers never
-import jax, so forking a jax-initialized trainer is safe) or ``"thread"``
+import jax, so forking a jax-initialized trainer is safe), ``"thread"``
 (same protocol over the same sockets, for platforms without fork — no
-parallel speedup, but identical semantics and wire path).
+parallel speedup, but identical semantics and wire path), or ``"dial"``
+(out-of-core: workers are NOT spawned here — they connect over TCP
+knowing only this service's address plus a `GraphDirectory` path, and
+receive their shard assignment and sampling config over the wire; see
+`repro.storage.fleet`/`repro.storage.worker`.  ``store`` may be ``None``
+— the trainer never needs the graph).
 
 ``respawn=True`` enables coordinator-driven worker respawn: a dead
 worker is replaced in place by a freshly spawned one under the same id
@@ -102,17 +107,22 @@ atexit.register(_reap_fleets_at_exit)
 
 
 class SamplingService:
-    def __init__(self, store: GraphStore, spec: SamplingSpec,
+    def __init__(self, store: Optional[GraphStore], spec: SamplingSpec,
                  seeds: Sequence[int], *, batch_size: int,
                  sizes: SizeConstraints, num_workers: int = 2,
                  num_replicas: Optional[int] = None, seed: int = 0,
                  rank: int = 0, world: int = 1, base_seed: int = 0,
                  backend: str = "process", respawn: bool = False,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None,
+                 edges_sorted_by_target: bool = False,
+                 num_shards: Optional[int] = None, listen_port: int = 0,
+                 accept_timeout: float = 60.0,
+                 on_listen: Optional[callable] = None):
         if num_workers < 1:
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
         self.plan = BatchPlan(batch_size, seed=seed, rank=rank, world=world,
-                              num_replicas=num_replicas)
+                              num_replicas=num_replicas,
+                              edges_sorted_by_target=edges_sorted_by_target)
         self.seeds = np.asarray(seeds)
         self.sizes = sizes
         if backend == "process" and "fork" not in mp.get_all_start_methods():
@@ -127,7 +137,24 @@ class SamplingService:
         self._closed = False
         self._owner_pid = os.getpid()
         self._spawned: list = []  # every process ever forked by this fleet
-        handles = [self._spawn_worker(wid) for wid in range(num_workers)]
+        self._lsock = None
+        self.address = None
+        if backend == "dial":
+            if store is not None:
+                raise ValueError(
+                    "backend='dial': workers open the GraphDirectory "
+                    "themselves; pass store=None")
+            if respawn:
+                raise ValueError("backend='dial' cannot respawn workers "
+                                 "(the service does not own their spawn)")
+            handles = self._accept_dial_fleet(
+                spec, num_workers, num_shards or 1, base_seed,
+                listen_port, accept_timeout, on_listen)
+        elif store is None:
+            raise ValueError(f"backend={backend!r} requires a store")
+        else:
+            handles = [self._spawn_worker(wid)
+                       for wid in range(num_workers)]
         # respawn=True: a dead worker is replaced in place (the fleet
         # returns to full width) instead of survivors absorbing its steps
         self.coordinator = Coordinator(
@@ -135,6 +162,29 @@ class SamplingService:
         self.client = StreamClient(self.coordinator, self.plan,
                                    len(self.seeds))
         _LIVE_FLEETS.add(self)
+
+    def _accept_dial_fleet(self, spec, num_workers: int, num_shards: int,
+                           base_seed: int, listen_port: int,
+                           accept_timeout: float,
+                           on_listen) -> list[WorkerHandle]:
+        """Out-of-core fleet admission: listen, publish the address via
+        `on_listen(address)` (the launcher's hook to spawn/point workers
+        at us), then run the JOIN/SHARD/READY/CONFIG handshake."""
+        # function-level import keeps the package dependency one-way at
+        # import time (repro.storage imports sampling_service, not v.v.)
+        from repro.storage.fleet import accept_dial_workers
+        transport = self.transport
+        if not hasattr(transport, "listen"):
+            from repro.sampling_service.transport import TcpTransport
+            transport = self.transport = TcpTransport()
+        self._lsock = transport.listen(listen_port)
+        self.address = self._lsock.getsockname()[:2]
+        if on_listen is not None:
+            on_listen(self.address)
+        return accept_dial_workers(
+            self._lsock, num_workers, num_shards=num_shards, spec=spec,
+            plan=self.plan, sizes=self.sizes, seeds=self.seeds,
+            base_seed=base_seed, accept_timeout=accept_timeout)
 
     def _spawn_worker(self, wid: int) -> WorkerHandle:
         store, spec, base_seed = self._worker_args
@@ -193,10 +243,15 @@ class SamplingService:
         return self.coordinator.watermarks()
 
     def kill_worker(self, worker_id: int) -> None:
-        """Hard-kill one worker (test/chaos hook for the rebalance path)."""
+        """Hard-kill one worker (test/chaos hook for the rebalance path).
+        For dial-in workers (no process handle) the closest equivalent is
+        dropping their stream: the worker exits on EOF and the
+        coordinator rebalances on the dead socket."""
         w = self.coordinator.workers[worker_id]
         if w.process is not None and hasattr(w.process, "kill"):
             w.process.kill()
+        elif w.process is None:
+            w.close()
 
     def close(self, timeout: float = 5.0) -> None:
         if self._closed:
@@ -208,6 +263,11 @@ class SamplingService:
             # sockets would corrupt the live protocol
             return
         self._closed = True
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
         self.coordinator.stop_all()
         self.client.close()  # then close sockets: unblocks stuck peers
         handles = (list(self.coordinator.workers.values())

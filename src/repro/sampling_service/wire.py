@@ -59,6 +59,20 @@ META = "meta"            # endpoint -> client: {epoch, num_steps} — HELLO ack
 HEARTBEAT = "heartbeat"  # endpoint -> client keepalive: {} — dead-peer
                          # detection (a client that sees neither frames nor
                          # heartbeats for its timeout declares the peer dead)
+# dial-in fleet handshake (repro.storage.fleet / repro.storage.worker):
+# workers connect over TCP knowing only (address, GraphDirectory path)
+JOIN = "join"            # worker -> service: {} — request admission
+SHARD = "shard"          # service -> worker: {worker, shard, num_shards}
+READY = "ready"          # worker -> service: {host, port} once its shard
+                         # server is bound ({} when the fleet is unsharded)
+CONFIG = "config"        # service -> worker: sampling config meta (spec/
+                         # plan/sizes/base_seed/peers); raw payload {seeds}
+# cross-shard graph lookups (repro.storage.sharded):
+NBR = "nbr"              # client -> shard server: {edge_set}; raw payload
+                         # {nodes} — batched neighbor request
+NBRS = "nbrs"            # shard server reply: raw {counts, neighbors}
+FEAT = "feat"            # client -> shard server: {node_set}; raw {nodes}
+FEATS = "feats"          # shard server reply: raw {<feature>: rows}
 
 
 class WireError(ConnectionError):
@@ -122,9 +136,22 @@ def unpack_arrays(blob: bytes) -> dict[str, np.ndarray]:
 
 
 def encode_frame(kind: str, meta: Optional[dict] = None,
-                 graph: Optional[GraphTensor] = None) -> bytes:
-    header = json.dumps({"kind": kind, "meta": meta or {}}).encode()
-    payload = pack_arrays(graph_to_flat(graph)) if graph is not None else b""
+                 graph: Optional[GraphTensor] = None,
+                 arrays: Optional[dict[str, np.ndarray]] = None) -> bytes:
+    """``graph`` ships a flat-dict GraphTensor payload; ``arrays`` ships a
+    bare array dict (header flag ``raw``) — the storage lookups (NBR/FEAT
+    et al.) move plain id/feature arrays that are not graphs.  The two
+    are mutually exclusive."""
+    if graph is not None and arrays is not None:
+        raise ValueError("frame carries either a graph or raw arrays")
+    head = {"kind": kind, "meta": meta or {}}
+    if arrays is not None:
+        head["raw"] = True
+        payload = pack_arrays(arrays)
+    else:
+        payload = (pack_arrays(graph_to_flat(graph))
+                   if graph is not None else b"")
+    header = json.dumps(head).encode()
     return b"".join([MAGIC, _U32.pack(len(header)), header,
                      _U64.pack(len(payload)), payload])
 
@@ -154,8 +181,9 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def send_frame(sock: socket.socket, kind: str, meta: Optional[dict] = None,
-               graph: Optional[GraphTensor] = None) -> None:
-    sock.sendall(encode_frame(kind, meta, graph))
+               graph: Optional[GraphTensor] = None,
+               arrays: Optional[dict[str, np.ndarray]] = None) -> None:
+    sock.sendall(encode_frame(kind, meta, graph, arrays))
 
 
 def recv_frame(sock: socket.socket,
@@ -192,7 +220,9 @@ def recv_frame(sock: socket.socket,
 
 
 def _recv_frame_body(sock: socket.socket
-                     ) -> tuple[str, dict, Optional[GraphTensor]]:
+                     ) -> tuple[str, dict,
+                                Optional[GraphTensor | dict[str,
+                                                            np.ndarray]]]:
     magic = _recv_exact(sock, len(MAGIC))
     if magic != MAGIC:
         raise WireError(f"bad frame magic {magic!r}")
@@ -203,9 +233,15 @@ def _recv_frame_body(sock: socket.socket
     (payload_len,) = _U64.unpack(_recv_exact(sock, _U64.size))
     if payload_len > MAX_PAYLOAD_BYTES:
         raise WireError(f"payload of {payload_len} bytes exceeds limit")
-    graph = (decode_payload(_recv_exact(sock, payload_len))
-             if payload_len else None)
-    return header["kind"], header.get("meta", {}), graph
+    if not payload_len:
+        payload = None
+    elif header.get("raw"):
+        # raw array-dict frame (NBR/FEAT family): hand back the decoded
+        # dict as-is — there is no GraphTensor to reconstruct
+        payload = unpack_arrays(_recv_exact(sock, payload_len))
+    else:
+        payload = decode_payload(_recv_exact(sock, payload_len))
+    return header["kind"], header.get("meta", {}), payload
 
 
 def socket_pair() -> tuple[socket.socket, socket.socket]:

@@ -82,8 +82,18 @@ class VersionedGraphStore(GraphStore):
 
     def update_node_features(self, node_set_name: str, feature: str,
                              ids, values) -> int:
-        """Overwrite feature rows for the given node ids."""
+        """Overwrite feature rows for the given node ids.
+
+        Copy-on-write for read-only arrays: wrapping an out-of-core
+        `repro.storage.MmapGraphStore` adopts ``mmap_mode="r"`` feature
+        matrices, which cannot (and must not — the GraphDirectory on
+        disk is shared by every shard) be written through.  The first
+        write to such a feature materializes a private RAM copy; untouched
+        features stay memory-mapped."""
         arr = self.node_features[node_set_name][feature]
+        if not arr.flags.writeable:
+            arr = np.array(arr)
+            self.node_features[node_set_name][feature] = arr
         arr[np.asarray(ids, np.int64)] = values
         return self.bump_version()
 

@@ -1,0 +1,23 @@
+"""Out-of-core graph storage: `GraphDirectory` on-disk format, mmap and
+sharded `GraphStore`s, and the dial-in sampler fleet (see README.md).
+
+numpy + sockets + stdlib only — this package sits inside the sampler
+worker import closure (repro-lint PUR005): nothing here may import jax.
+"""
+from repro.storage.format import (FORMAT_NAME, MmapGraphStore, graph_bytes,
+                                  write_graph)
+from repro.storage.sharded import (GraphShardServer, RemoteShardClient,
+                                   ShardedGraphStore, ShardMap,
+                                   shard_bounds)
+
+__all__ = [
+    "FORMAT_NAME",
+    "GraphShardServer",
+    "MmapGraphStore",
+    "RemoteShardClient",
+    "ShardMap",
+    "ShardedGraphStore",
+    "graph_bytes",
+    "shard_bounds",
+    "write_graph",
+]

@@ -1,0 +1,142 @@
+"""SamplerEndpoint step-range replay cache: a client resuming from its
+watermark must be served recent steps from cached frame bytes (no
+resampling), with bit-identical batches; holes, epoch changes and
+replay_steps=0 all fall back to live production."""
+import numpy as np
+import pytest
+
+from repro.core.schema import mag_schema
+from repro.data import (GraphBatcher, InMemorySampler, SamplingSpecBuilder,
+                        find_size_constraints)
+from repro.data.synthetic import synthetic_mag
+from repro.sampling_service.remote import (RemoteStreamClient,
+                                           SamplerEndpoint, _ReplayWindow)
+
+
+def _leaves(g):
+    import jax
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(g)]
+
+
+def assert_graphs_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+class CountingSource:
+    """GraphBatcher-contract wrapper recording every epoch() entry —
+    the replay cache's whole point is that resumed steps never re-enter
+    the source."""
+
+    def __init__(self, batcher):
+        self._b = batcher
+        self.calls: list[tuple[int, int]] = []  # (epoch, start_step)
+
+    @property
+    def num_steps(self):
+        return self._b.num_steps
+
+    def epoch(self, epoch, *, start_step=0):
+        self.calls.append((epoch, start_step))
+        return self._b.epoch(epoch, start_step=start_step)
+
+
+@pytest.fixture(scope="module")
+def batches():
+    store, _ = synthetic_mag(n_papers=160, n_authors=70, n_institutions=6,
+                             n_fields=16, feat_dim=8)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    seed_op.sample(4, "cites")
+    spec = seed_op.build()
+    roots = list(range(32))
+    graphs = InMemorySampler(store, spec, seed=0).sample(roots)
+    sizes = find_size_constraints(graphs, 4)
+    return graphs, sizes  # 8 steps of 4
+
+
+def _fresh(batches, **kwargs):
+    graphs, sizes = batches
+    source = CountingSource(GraphBatcher(graphs, 4, sizes, seed=0,
+                                         num_replicas=1))
+    endpoint = SamplerEndpoint(lambda rank: source, **kwargs)
+    return source, endpoint
+
+
+def test_resume_serves_from_cache(batches):
+    graphs, sizes = batches
+    source, endpoint = _fresh(batches, replay_steps=8)
+    want = list(GraphBatcher(graphs, 4, sizes, seed=0,
+                             num_replicas=1).epoch(0))
+    with endpoint:
+        with RemoteStreamClient(endpoint.address) as client:
+            got = list(client.epoch(0))
+        assert len(got) == len(want) == 8
+        assert source.calls == [(0, 0)]
+        assert endpoint.replay_stats() == {0: 0}
+
+        # resume from step 4: steps 4..7 come from the cache; the live
+        # stream enters the source at 8 (i.e. produces nothing)
+        with RemoteStreamClient(endpoint.address) as client:
+            resumed = list(client.epoch(0, start_step=4))
+        assert len(resumed) == 4
+        for g, w in zip(resumed, want[4:]):
+            assert_graphs_equal(g, w)
+        assert source.calls == [(0, 0), (0, 8)]
+        assert endpoint.replay_stats() == {0: 4}
+
+
+def test_hole_falls_back_to_live(batches):
+    """replay_steps=4 after a full 8-step epoch caches steps 4..7; a
+    resume from 2 hits a hole at the very first step -> fully live."""
+    source, endpoint = _fresh(batches, replay_steps=4)
+    with endpoint:
+        with RemoteStreamClient(endpoint.address) as client:
+            list(client.epoch(0))
+        with RemoteStreamClient(endpoint.address) as client:
+            resumed = list(client.epoch(0, start_step=2))
+        assert len(resumed) == 6
+        assert source.calls == [(0, 0), (0, 2)]
+        assert endpoint.replay_stats() == {0: 0}
+
+        # ... but a resume aligned with the window IS served from it
+        with RemoteStreamClient(endpoint.address) as client:
+            list(client.epoch(0, start_step=5))
+        assert source.calls == [(0, 0), (0, 2), (0, 8)]
+        assert endpoint.replay_stats() == {0: 3}
+
+
+def test_epoch_change_clears_window(batches):
+    source, endpoint = _fresh(batches, replay_steps=8)
+    with endpoint:
+        with RemoteStreamClient(endpoint.address) as client:
+            list(client.epoch(0))
+            list(client.epoch(1))
+            # epoch 0's frames are gone — resume must resample live
+            list(client.epoch(0, start_step=6))
+        assert source.calls == [(0, 0), (1, 0), (0, 6)]
+        assert endpoint.replay_stats() == {0: 0}
+
+
+def test_replay_disabled(batches):
+    source, endpoint = _fresh(batches, replay_steps=0)
+    with endpoint:
+        with RemoteStreamClient(endpoint.address) as client:
+            list(client.epoch(0))
+            list(client.epoch(0, start_step=7))
+        assert source.calls == [(0, 0), (0, 7)]
+        assert endpoint.replay_stats() == {0: 0}
+
+
+def test_replay_window_unit():
+    win = _ReplayWindow(3)
+    for step in range(5):
+        win.put(0, step, b"f%d" % step)
+    assert sorted(win.frames) == [2, 3, 4]  # capacity-evicted from the left
+    assert win.take(0, 3) == [b"f3", b"f4"]
+    assert win.take(0, 0) == []   # hole at 0,1
+    assert win.take(1, 3) == []   # wrong epoch
+    win.put(1, 0, b"g0")          # epoch change resets
+    assert sorted(win.frames) == [0] and win.epoch == 1

@@ -1,0 +1,61 @@
+"""Property-based GraphDirectory roundtrip (hypothesis): random
+heterogeneous schemas — multiple node sets, empty edge sets, zero-degree
+nodes, feature-less node sets — survive write_graph -> MmapGraphStore
+with identical data and identical neighbor answers."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+                         "(not a runtime dependency)")
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core.schema import (EdgeSetSpec, FeatureSpec,  # noqa: E402
+                               GraphSchema, NodeSetSpec)
+from repro.data.sampling import GraphStore  # noqa: E402
+from repro.storage import MmapGraphStore, write_graph  # noqa: E402
+
+from test_storage import _assert_stores_equal  # noqa: E402
+
+_names = st.sampled_from(["a", "b", "c"])
+
+
+@st.composite
+def _stores(draw):
+    ns_names = draw(st.lists(_names, min_size=1, max_size=3, unique=True))
+    num_nodes = {n: draw(st.integers(1, 8)) for n in ns_names}
+    es = {}
+    edges = {}
+    for i in range(draw(st.integers(0, 3))):
+        s = draw(st.sampled_from(ns_names))
+        t = draw(st.sampled_from(ns_names))
+        name = f"e{i}"
+        es[name] = EdgeSetSpec(s, t)
+        n_e = draw(st.integers(0, 12))
+        edges[name] = (
+            np.array(draw(st.lists(st.integers(0, num_nodes[s] - 1),
+                                   min_size=n_e, max_size=n_e)), np.int64),
+            np.array(draw(st.lists(st.integers(0, num_nodes[t] - 1),
+                                   min_size=n_e, max_size=n_e)), np.int64))
+    feats = {n: {"x": np.arange(num_nodes[n] * 2,
+                                dtype=np.float32).reshape(num_nodes[n], 2)}
+             for n in ns_names if draw(st.booleans())}
+    schema = GraphSchema(
+        node_sets={n: NodeSetSpec(
+            {"x": FeatureSpec("float32", (2,))} if n in feats else {})
+            for n in ns_names},
+        edge_sets=es)
+    return GraphStore(schema, edges, feats, num_nodes)
+
+
+@hypothesis.given(_stores())
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_roundtrip_property(tmp_path_factory, store):
+    path = write_graph(store, str(tmp_path_factory.mktemp("hyp") / "g"))
+    m = MmapGraphStore(path)
+    _assert_stores_equal(store, m)
+    for name in store.edges:
+        src_set = store.schema.edge_sets[name].source
+        for u in range(store.num_nodes[src_set]):
+            np.testing.assert_array_equal(store.neighbors(name, u),
+                                          m.neighbors(name, u))

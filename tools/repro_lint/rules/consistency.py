@@ -1,10 +1,12 @@
 """Cross-file consistency rules (WIRE / MESH).
 
 WIRE001 — every frame kind declared in ``sampling_service/wire.py`` must
-be referenced by at least one consumer in the package (worker handles
-ASSIGN/STOP, remote handles HELLO/META/HEARTBEAT/BATCH/DONE/ERROR, ...).
-A declared-but-unhandled kind is a protocol hole: the sender can emit a
-frame every receiver treats as "unexpected command".
+be referenced by at least one consumer module — any module in the
+project that imports wire (the fleet package handles ASSIGN/STOP/HELLO/
+META/..., and the storage shard servers/dial workers handle NBR/FEAT/
+JOIN/SHARD/... from ``repro.storage``).  A declared-but-unhandled kind
+is a protocol hole: the sender can emit a frame every receiver treats as
+"unexpected command".
 
 MESH001 — every mesh-axis name a sharding rule table maps a logical axis
 to must be declared by some mesh construction (``Mesh(devs, axes)``,
@@ -47,11 +49,10 @@ class WireKindRule(Rule):
 
         if not kinds:
             return
-        package = wire.module_name.rsplit(".", 1)[0]
-        consumers = [m for m in project.modules
-                     if m is not wire
-                     and (m.module_name == package
-                          or m.module_name.startswith(package + "."))]
+        # consumers: any module importing wire, wherever it lives — the
+        # NBR/FEAT lookup family is handled in repro.storage, not in the
+        # sampling_service package
+        consumers = [m for m in project.modules if m is not wire]
         referenced: set[str] = set()
         for m in consumers:
             wire_aliases = {
@@ -75,7 +76,7 @@ class WireKindRule(Rule):
             yield wire.diag(
                 node, "WIRE001",
                 f"frame kind {name} = \"{str_const(node.value)}\" is "
-                "declared but no consumer in the package ever references "
+                "declared but no consumer module ever references "
                 "it — dispatch would drop it as an unexpected command")
 
 

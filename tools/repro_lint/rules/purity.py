@@ -12,15 +12,17 @@ contract quietly breaks:
   PUR002  stdlib ``random.*`` — same global-state hazard.
   PUR003  wall-clock / OS entropy (``time.time``, ``os.urandom``,
           ``uuid.uuid4``, ``datetime.now``) inside the determinism-scoped
-          packages (``repro.data``, ``repro.sampling_service``).
+          packages (``repro.data``, ``repro.sampling_service``,
+          ``repro.storage``).
           ``time.monotonic`` / ``time.sleep`` / ``time.perf_counter``
           stay allowed: pacing and timeouts are not data.
   PUR004  ``np.random.default_rng()`` with no seed — fresh OS entropy on
           every call.
   PUR005  an (unguarded, module-level) ``jax`` import reachable from the
-          numpy-only sampler-worker children: ``sampling_service/
-          worker.py`` and everything it imports, including every parent
-          package ``__init__`` those imports execute.
+          numpy-only sampler-worker entry points — the forked
+          ``sampling_service/worker.py`` AND the out-of-core dial-in
+          ``storage/worker.py`` — and everything they import, including
+          every parent package ``__init__`` those imports execute.
 """
 from __future__ import annotations
 
@@ -44,9 +46,9 @@ _CLOCK_BANNED = {
     "secrets.randbelow",
 }
 
-_CLOCK_SCOPES = ("repro.data", "repro.sampling_service")
+_CLOCK_SCOPES = ("repro.data", "repro.sampling_service", "repro.storage")
 
-_WORKER_SUFFIX = "sampling_service.worker"
+_WORKER_SUFFIXES = ("sampling_service.worker", "storage.worker")
 
 
 def _in_scope(module_name: str, scopes: tuple[str, ...]) -> bool:
@@ -170,15 +172,19 @@ class JaxClosureRule(Rule):
     summary = "the sampler-worker import closure must stay numpy-only"
 
     def check_project(self, project: Project) -> Iterable[Diagnostic]:
-        root = project.find_suffix(_WORKER_SUFFIX)
-        if root is None:
+        roots = [r for r in (project.find_suffix(s)
+                             for s in _WORKER_SUFFIXES) if r is not None]
+        if not roots:
             return
         # BFS over the import graph with real import semantics: importing
         # repro.core.graph_tensor also executes repro/__init__.py and
-        # repro/core/__init__.py, so ancestors join the closure.
-        chain: dict[str, tuple[str, ...]] = {root.module_name: ()}
-        queue = [root]
-        seen = {root.module_name}
+        # repro/core/__init__.py, so ancestors join the closure.  One BFS
+        # seeded with every worker entry point: the closures overlap and
+        # a module must be flagged once.
+        chain: dict[str, tuple[str, ...]] = {
+            r.module_name: () for r in roots}
+        queue = list(roots)
+        seen = {r.module_name for r in roots}
         while queue:
             mod = queue.pop(0)
             for target, _, guarded in _module_level_imports(mod):
