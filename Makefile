@@ -12,8 +12,9 @@
 #                        exits non-zero on any non-baselined finding.
 #   make test-kernels  — kernel + dispatch parity suites in interpret mode
 #   make ci            — what the CI test matrix runs: both of the above
-#   make smoke         — end-to-end example drivers (quickstart + the
-#                        OGBN-MAG trainer sharded over 8 forced CPU devices)
+#   make smoke         — end-to-end example drivers (quickstart, the
+#                        flash-GAT loss/grad parity gate, and the OGBN-MAG
+#                        trainer sharded over 8 forced CPU devices)
 #   make smoke-multihost — 2-process jax.distributed OGBN-MAG run (4 CPU
 #                        devices per process) with sampler batches over
 #                        TCP; per-rank logs land in MULTIHOST_LOG_DIR
@@ -61,6 +62,7 @@ ci: test test-kernels
 
 smoke:
 	$(PYTHON) examples/quickstart.py
+	$(PYTHON) examples/gat_flash_parity.py
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
 	    --papers 320
@@ -87,6 +89,7 @@ smoke-storage:
 
 bench:
 	$(PYTHON) -m benchmarks.run --quick --only dispatch
+	$(PYTHON) -m benchmarks.run --quick --only layout
 	$(PYTHON) -m benchmarks.run --quick --only dp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only mp_scaling
 	$(PYTHON) -m benchmarks.run --quick --only sampler_service
@@ -107,6 +110,7 @@ check-bench:
 	    --require BENCH_dp_scaling.json \
 	    --require BENCH_mp_scaling.json \
 	    --require BENCH_segment_pool_dispatch.json \
+	    --require BENCH_kernel_layout.json \
 	    --require BENCH_multihost.json \
 	    --require BENCH_serve.json \
 	    --require BENCH_graphstore.json \

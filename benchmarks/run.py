@@ -13,6 +13,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
                         vs the jnp reference path (also written to
                         results/BENCH_segment_pool_dispatch.json so PRs
                         accumulate a perf trajectory)
+  layout_*            — one-hot vs CSR-run segment kernels across
+                        sorted/unsorted edge layouts and sum/max/mean,
+                        plus the autotuner's steady-state recompile
+                        count, written to results/BENCH_kernel_layout
+                        .json (gated: CSR-run beats one-hot on the
+                        sorted layout, bit-identical fp32 sums, zero
+                        warm recompiles); also regenerates
+                        results/autotune_cache.json
   dp_scaling_*        — §7 data-parallel training over a ("data",) device
                         mesh: one fixed super-batch program at mesh sizes
                         1..8 (host-forced CPU devices), written to
@@ -388,6 +396,154 @@ def bench_dispatch(quick: bool):
         "reference_us_per_call": t_ref,
         disp_key: t_disp,
         "backend": jax.default_backend(),
+    }, indent=1))
+
+
+def bench_layout(quick: bool):
+    """Kernel layout study: one-hot vs CSR-run segment pooling across
+    sorted/unsorted id layouts and sum/max/mean reduces, plus the
+    autotuner's warm-up -> steady-state recompile count.  Written to
+    results/BENCH_kernel_layout.json.
+
+    CPU-honest: every kernel timing here is interpret mode, so it is
+    published under ``timings_interpret_us`` (NOT a ``us_per_call`` key
+    the check_bench baseline diff would gate) and the hard gates compare
+    the two variants against EACH OTHER in the same mode — the CSR-run
+    scan must beat the one-hot matmul on the sorted layout for sum and
+    max, parity must be exact (bit-identical for integer-valued fp32
+    sums), and a warmed autotune cache must add zero recompiles.  The
+    run also regenerates results/autotune_cache.json (a tuning artifact,
+    not a benchmark result — check_bench ignores it)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import autotune, dispatch
+    from repro.kernels.segment_pool.kernel import (segment_pool,
+                                                   segment_pool_runs)
+    from repro.kernels.segment_pool.ref import segment_pool_ref
+
+    n, e, d = 1000, 8000, 64  # the fixed bench shape the gates refer to
+    rng = np.random.default_rng(0)
+    # integer-valued fp32: sums are exact in any association order, so
+    # the bitwise parity gates below are honest rather than lucky
+    vals_u = rng.integers(-8, 8, (e, d)).astype(np.float32)
+    ids_u = rng.integers(0, n, e).astype(np.int32)
+    order = np.argsort(ids_u, kind="stable")  # a true edge permutation:
+    # values ride along with their ids, so both layouts pool the same
+    # multiset per segment and must agree bit for bit
+    layouts = {"sorted": (jnp.asarray(vals_u[order]),
+                          jnp.asarray(ids_u[order])),
+               "unsorted": (jnp.asarray(vals_u), jnp.asarray(ids_u))}
+    variants = {"onehot": segment_pool, "runs": segment_pool_runs}
+    iters = 2 if quick else 4
+
+    timings, parity = {}, {}
+    for reduce in ("sum", "max"):
+        outs = {}
+        for vname, fn in variants.items():
+            blk = dispatch.choose_e_block(n, d, 4, reduce=reduce,
+                                          n_edges=e, variant=vname)
+            for lname, (vals, ids) in layouts.items():
+                jfn = jax.jit(lambda v, s, fn=fn, blk=blk: fn(
+                    v, s, n_segments=n, reduce=reduce, e_block=blk,
+                    interpret=True))
+                t = timeit(lambda: jfn(vals, ids).block_until_ready(),
+                           warmup=1, iters=iters)
+                key = f"{reduce}_{vname}_{lname}"
+                timings[key] = t
+                outs[(vname, lname)] = np.asarray(jfn(vals, ids))
+                emit(f"layout_{key}", t, f"n={n};e={e};d={d};e_block={blk}")
+        ref = np.asarray(segment_pool_ref(
+            jnp.asarray(vals_u), jnp.asarray(ids_u), n_segments=n,
+            reduce=reduce))
+        parity[f"{reduce}_bitwise_equal"] = int(all(
+            np.array_equal(o, ref) for o in outs.values()))
+
+    # mean rides the dispatch path (sum kernel + O(E) count): time the
+    # variant each layout hint actually picks
+    was = dispatch.enabled()
+    dispatch.enable(True)
+    try:
+        for lname, (vals, ids) in layouts.items():
+            hint = lname == "sorted"
+            with dispatch.layout(sorted_by_target=hint):
+                dec = dispatch.segment_reduce_decision((e, d), jnp.float32,
+                                                       n, "mean")
+            jmean = jax.jit(lambda v, s, hint=hint: dispatch.segment_reduce(
+                v, s, n, "mean", sorted_ids=hint))
+            t = timeit(lambda: jmean(vals, ids).block_until_ready(),
+                       warmup=1, iters=iters)
+            timings[f"mean_{dec.variant}_{lname}"] = t
+            emit(f"layout_mean_{dec.variant}_{lname}", t, dec.reason)
+        ref_mean = np.asarray(segment_pool_ref(
+            jnp.asarray(vals_u), jnp.asarray(ids_u), n_segments=n,
+            reduce="sum"))
+        cnt = np.bincount(ids_u, minlength=n)[:n]
+        ref_mean = ref_mean / np.maximum(cnt, 1)[:, None]
+        got_mean = np.asarray(jax.jit(
+            lambda v, s: dispatch.segment_reduce(v, s, n, "mean",
+                                                 sorted_ids=True))(
+            *layouts["sorted"]))
+        parity["mean_matches_reference"] = int(
+            np.allclose(got_mean, ref_mean, rtol=1e-6, atol=1e-6))
+
+        # -- autotune: tune the bench shape, then count steady-state
+        # recompiles with the warmed cache consulted at trace time
+        autotune.clear()
+        tuned = {
+            "sum_sorted": autotune.tune_segment_pool(
+                n, d, reduce="sum", sorted_ids=True, n_edges=e, iters=2),
+            "max_sorted": autotune.tune_segment_pool(
+                n, d, reduce="max", sorted_ids=True, n_edges=e, iters=2),
+            "sum_unsorted": autotune.tune_segment_pool(
+                n, d, reduce="sum", sorted_ids=False, n_edges=e, iters=2),
+        }
+        autotune._LOADED.clear()  # force one re-read of the written file
+        dispatch.use_autotune(True)
+        try:
+            warmed = jax.jit(lambda v, s: dispatch.segment_reduce(
+                v, s, n, "sum", sorted_ids=True))
+            for _ in range(5):
+                warmed(*layouts["sorted"]).block_until_ready()
+            recompiles = warmed._cache_size() - 1
+            with dispatch.layout(sorted_by_target=True):
+                dec = dispatch.segment_reduce_decision((e, d), jnp.float32,
+                                                       n, "sum")
+            autotuned_consulted = int(dec.reason.startswith("autotuned:"))
+        finally:
+            dispatch.use_autotune(False)
+    finally:
+        dispatch.enable(was)
+    emit("layout_autotune_steady_state_recompiles", float(recompiles),
+         f"consulted={autotuned_consulted}")
+
+    out_path = Path("results/BENCH_kernel_layout.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps({
+        "benchmark": "kernel_layout",
+        "shape": {"n_segments": n, "n_edges": e, "feature_dim": d},
+        "note": "interpret-mode variant study: timings are semantics-"
+                "honest CPU numbers (not TPU perf), gated against each "
+                "other, not against wall-clock baselines",
+        "timings_interpret_us": {k: round(v, 1)
+                                 for k, v in timings.items()},
+        "parity": parity,
+        "speedup_runs_vs_onehot_sorted": {
+            r: round(timings[f"{r}_onehot_sorted"]
+                     / timings[f"{r}_runs_sorted"], 2)
+            for r in ("sum", "max")},
+        "autotune": {"tuned": tuned,
+                     "steady_state_recompiles": recompiles,
+                     "cache_consulted": autotuned_consulted},
+        "backend": "cpu",
+        "gates": {
+            "parity.sum_bitwise_equal": {"min": 1},
+            "parity.max_bitwise_equal": {"min": 1},
+            "parity.mean_matches_reference": {"min": 1},
+            "speedup_runs_vs_onehot_sorted.sum": {"min": 1.0},
+            "speedup_runs_vs_onehot_sorted.max": {"min": 1.0},
+            "autotune.steady_state_recompiles": {"max": 0},
+            "autotune.cache_consulted": {"min": 1},
+        },
     }, indent=1))
 
 
@@ -1292,6 +1448,7 @@ def main(argv=None):
         "batching": bench_batching,
         "kernels": bench_kernels,
         "dispatch": bench_dispatch,
+        "layout": bench_layout,
         "dp_scaling": bench_dp_scaling,
         "mp_scaling": bench_mp_scaling,
         "sampler_service": bench_sampler_service,

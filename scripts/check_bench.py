@@ -33,6 +33,12 @@ which lets a benchmark carry self-describing acceptance bounds::
 keyed by dotted path into the same JSON document (``min`` gates
 higher-is-better metrics like QPS, ``max`` gates lower-is-better ones
 like latency or recompile counts).
+
+Only ``BENCH_*.json`` files participate.  Other artifacts under
+results/ — in particular ``autotune_cache.json``, the kernel
+autotuner's tuning record (see src/repro/kernels/autotune.py) — are
+machine-local tuning state, not benchmark results, and are excluded by
+construction of the glob; do not widen it to ``*.json``.
 """
 from __future__ import annotations
 

@@ -181,12 +181,18 @@ class SimpleConv(AnyToAnyConv):
             graph.node_sets[recv_name].capacity,
             h_src.shape[1], h_tgt.shape[1],
             w.shape[1], h_src.dtype, self.activation_name,
-            n_edges=int(es.adjacency.source.shape[0]))
+            n_edges=int(es.adjacency.source.shape[0]),
+            sorted_ids=self._sorted_hint())
 
     def _fused_endpoints(self, es):
         if self.receiver_tag == TARGET:
             return es.adjacency.source_name, es.adjacency.target_name
         return es.adjacency.target_name, es.adjacency.source_name
+
+    def _sorted_hint(self):
+        """The BatchPlan layout bit sorts edges by TARGET; a SOURCE
+        receiver scatters by source ids, which that sort leaves unsorted."""
+        return None if self.receiver_tag == TARGET else False
 
     def __call__(self, params, graph: GraphTensor, edge_set_name: str):
         if not self.fused_decision(params, graph, edge_set_name).use_kernel:
@@ -206,7 +212,8 @@ class SimpleConv(AnyToAnyConv):
         return kernel_dispatch.edge_mpnn(
             h_src, h_tgt, sender_idx, tgt, w, b,
             n_src=graph.node_sets[sender_name].capacity, n_tgt=n_tgt,
-            activation=self.activation_name)
+            activation=self.activation_name,
+            sorted_ids=self._sorted_hint())
 
     def convolve(self, params, *, sender_node_input, sender_edge_input,
                  receiver_input, broadcast_from_receiver, pool_to_receiver,

@@ -50,17 +50,22 @@ _REDUCE_TYPES = ("sum", "mean", "max", "min")
 # does not divide fall back to the unsharded op.
 # ---------------------------------------------------------------------------
 
-def _mp_segment_reduce(value, seg_ids, n_segments, reduce_type):
+def _mp_segment_reduce(value, seg_ids, n_segments, reduce_type,
+                       sorted_ids=None):
     """Segment reduction with the feature axis split over the model mesh
     axis (all-gather at the pool boundary); unsharded outside a
-    model-parallel trace context."""
+    model-parallel trace context.  sorted_ids is the layout hint for
+    dispatch (None defers to the ambient `dispatch.layout()` context;
+    performance-only, never correctness)."""
     ctx = mp_context.current_model_context()
     if ctx is not None and ctx.can_split(value):
         out = kernel_dispatch.segment_reduce(ctx.split(value), seg_ids,
-                                             n_segments, reduce_type)
+                                             n_segments, reduce_type,
+                                             sorted_ids=sorted_ids)
         return ctx.gather(out)
     return kernel_dispatch.segment_reduce(value, seg_ids, n_segments,
-                                          reduce_type)
+                                          reduce_type,
+                                          sorted_ids=sorted_ids)
 
 
 def use_kernels(enabled: bool) -> None:
@@ -116,7 +121,11 @@ def pool_edges_to_node(graph: GraphTensor, edge_set_name: str, tag: str,
     value = _resolve_feature(es, feature_name, feature_value)
     num_nodes = graph.node_sets[node_set_name].capacity
     seg_ids = jnp.where(es.mask(), idx, num_nodes)  # padding -> dropped
-    return _mp_segment_reduce(value, seg_ids, num_nodes, reduce_type)
+    # BatchPlan sorts edges by (component, target) and pads last, so
+    # TARGET-keyed ids are non-decreasing exactly when the ambient
+    # dispatch.layout() hint says so; SOURCE-keyed ids never are.
+    return _mp_segment_reduce(value, seg_ids, num_nodes, reduce_type,
+                              sorted_ids=None if tag == TARGET else False)
 
 
 def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
@@ -129,14 +138,17 @@ def segment_softmax(graph: GraphTensor, edge_set_name: str, tag: str,
     emask = es.mask()
     emask_b = emask.reshape(emask.shape + (1,) * (feature_value.ndim - 1))
     seg_ids = jnp.where(emask, idx, num_nodes)
+    sorted_ids = None if tag == TARGET else False
     # max-shift for stability, then exp-sum — both dispatched reductions
     # (feature-split over the model axis inside a model-parallel trace)
-    seg_max = _mp_segment_reduce(feature_value, seg_ids, num_nodes, "max")
+    seg_max = _mp_segment_reduce(feature_value, seg_ids, num_nodes, "max",
+                                 sorted_ids=sorted_ids)
     shifted = jnp.where(emask_b,
                         feature_value - jnp.take(seg_max, idx, axis=0),
                         -jnp.inf)
     exp = jnp.where(emask_b, jnp.exp(shifted), 0)
-    seg_sum = _mp_segment_reduce(exp, seg_ids, num_nodes, "sum")
+    seg_sum = _mp_segment_reduce(exp, seg_ids, num_nodes, "sum",
+                                 sorted_ids=sorted_ids)
     denom = jnp.take(seg_sum, idx, axis=0)
     return exp / jnp.maximum(denom, 1e-37)
 
@@ -171,7 +183,11 @@ def _pool_items_to_context(piece, num_components, reduce_type, value):
         raise ValueError(f"unknown reduce_type {reduce_type!r}")
     comp = jnp.where(piece.mask(), piece.component_ids(),
                      num_components)  # padding -> dropped
-    return _mp_segment_reduce(value, comp, num_components, reduce_type)
+    # component_ids is non-decreasing by construction (searchsorted over
+    # the cumulative sizes) and padding rows map to num_components at the
+    # end, so context pooling is always run-sorted
+    return _mp_segment_reduce(value, comp, num_components, reduce_type,
+                              sorted_ids=True)
 
 
 def pool_nodes_to_context(graph: GraphTensor, node_set_name: str,

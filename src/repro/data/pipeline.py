@@ -39,15 +39,25 @@ class GraphBatcher:
       ``repro.distributed.graph_sharding`` shards over the mesh's "data"
       axis.  ``R=1`` emits ``[1, ...]`` stacks, so a 1-device run exercises
       the identical code path.
+
+    ``edges_sorted_by_target`` (default True) makes every merged batch
+    ship each edge set's edges stable-sorted by (component, target id) —
+    the CSR-run layout the kernel dispatch layer exploits
+    (`dispatch.layout`).  Pure edge reordering: per-edge multiset and all
+    pooled results are identical either way (message passing is
+    permutation-invariant); the opt-out exists for stores whose edge
+    order is already meaningful.
     """
 
     def __init__(self, graphs: Sequence[GraphTensor], batch_size: int,
                  sizes: SizeConstraints, *, seed: int = 0,
                  rank: int = 0, world: int = 1, drop_remainder: bool = True,
-                 num_replicas: Optional[int] = None):
+                 num_replicas: Optional[int] = None,
+                 edges_sorted_by_target: bool = True):
         self.graphs = list(graphs)
         self.plan = BatchPlan(batch_size, seed=seed, rank=rank, world=world,
-                              num_replicas=num_replicas)
+                              num_replicas=num_replicas,
+                              edges_sorted_by_target=edges_sorted_by_target)
         self.batch_size = batch_size
         self.sizes = sizes
         self.seed = seed

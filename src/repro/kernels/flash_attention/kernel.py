@@ -20,9 +20,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  q_block: int, kv_block: int, n_kv_blocks: int,
-                  causal: bool, scale: float):
+def _flash_kernel(q_ref, k_ref, v_ref, *rest, q_block: int, kv_block: int,
+                  n_kv_blocks: int, causal: bool, scale: float,
+                  segmented: bool = False):
+    if segmented:
+        qseg_ref, kseg_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     kv_step = pl.program_id(2)
 
     @pl.when(kv_step == 0)
@@ -43,9 +47,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                  + jax.lax.broadcasted_iota(jnp.int32,
                                             (q_block, kv_block), 1))
         logits = jnp.where(k_idx <= q_idx, logits, NEG_INF)
+    if segmented:
+        # block-diagonal (segment) mask: a query attends only to keys with
+        # the same segment id (graph components; mismatching sentinels mark
+        # padding)
+        qs = qseg_ref[0]  # [q_blk] int32
+        ks = kseg_ref[0]  # [kv_blk] int32
+        logits = jnp.where(qs[:, None] == ks[None, :], logits, NEG_INF)
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
     p = jnp.exp(logits - m_new)
+    if segmented:
+        # fully-masked rows have m_new == NEG_INF, making exp(0) = 1 above;
+        # zero them so l stays 0 and the finalize step emits 0, not mean(v)
+        p = jnp.where(logits <= NEG_INF / 2, 0.0, p)
     alpha = jnp.exp(m_prev - m_new)
     l_new = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
     acc_scr[...] = (acc_scr[...] * alpha
@@ -61,11 +76,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
                                              "interpret"))
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    q_segments: jnp.ndarray | None = None,
+                    kv_segments: jnp.ndarray | None = None, *,
                     causal: bool = True, q_block: int = 128,
                     kv_block: int = 128, interpret: bool = False
                     ) -> jnp.ndarray:
     """q: [B, Sq, H, D]; k, v: [B, Skv, K, D] with H = K * G.
+    Optional q_segments [B, Sq] / kv_segments [B, Skv] int32 restrict
+    attention to matching segment ids (block-diagonal mask — graph
+    components); queries whose segment matches no key emit 0.
     Returns [B, Sq, H, D]."""
     b, sq, h, d = q.shape
     skv, kh = k.shape[1], k.shape[2]
@@ -74,6 +94,9 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     kv_block = min(kv_block, skv)
     assert sq % q_block == 0 and skv % kv_block == 0
     scale = d ** -0.5
+    segmented = q_segments is not None
+    if segmented and kv_segments is None:
+        kv_segments = q_segments
 
     # layout: fold heads into the leading grid dim; kv broadcast over G
     qf = q.transpose(0, 2, 1, 3).reshape(b * kh, g, sq, d)
@@ -85,15 +108,30 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     n_q = sq // q_block
     n_kv = skv // kv_block
 
+    in_specs = [
+        pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
+        pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+        pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
+    ]
+    operands = [qf, kf, vf]
+    if segmented:
+        # segment ids are per (batch, position): index the batch row from
+        # the folded head-grid index
+        in_specs += [
+            pl.BlockSpec((1, q_block),
+                         lambda bh, qi, ki: (bh // (kh * g), qi)),
+            pl.BlockSpec((1, kv_block),
+                         lambda bh, qi, ki: (bh // (kh * g), ki)),
+        ]
+        operands += [q_segments.astype(jnp.int32),
+                     kv_segments.astype(jnp.int32)]
+
     out = pl.pallas_call(
         functools.partial(_flash_kernel, q_block=q_block, kv_block=kv_block,
-                          n_kv_blocks=n_kv, causal=causal, scale=scale),
+                          n_kv_blocks=n_kv, causal=causal, scale=scale,
+                          segmented=segmented),
         grid=(b * kh * g, n_q, n_kv),
-        in_specs=[
-            pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, kv_block, d), lambda bh, qi, ki: (bh, ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, q_block, d), lambda bh, qi, ki: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b * kh * g, sq, d), q.dtype),
         scratch_shapes=[
@@ -102,6 +140,6 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((q_block, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, kf, vf)
+    )(*operands)
     return (out.reshape(b, kh, g, sq, d).transpose(0, 3, 1, 2, 4)
             .reshape(b, sq, h, d))

@@ -7,8 +7,10 @@ from repro.kernels.flash_attention import kernel as _k
 from repro.kernels.flash_attention.ref import attention_ref
 
 
-def flash_attention(q, k, v, *, causal: bool = True,
-                    q_block: int = 128, kv_block: int = 128):
-    return _k.flash_attention(q, k, v, causal=causal, q_block=q_block,
+def flash_attention(q, k, v, q_segments=None, kv_segments=None, *,
+                    causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128):
+    return _k.flash_attention(q, k, v, q_segments, kv_segments,
+                              causal=causal, q_block=q_block,
                               kv_block=kv_block,
                               interpret=jax.default_backend() != "tpu")

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+def attention_ref(q, k, v, q_segments=None, kv_segments=None, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """Optional q_segments [B, Sq] / kv_segments [B, Skv] restrict
+    attention to matching segment ids; fully-masked queries emit 0
+    (matching the kernel's l=0 contract)."""
     b, sq, h, d = q.shape
     skv, kh = k.shape[1], k.shape[2]
     g = h // kh
@@ -15,6 +19,30 @@ def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
     if causal:
         mask = jnp.tril(jnp.ones((sq, skv), bool), skv - sq)
         logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
-    probs = jax.nn.softmax(logits, axis=-1)
+    if q_segments is not None:
+        if kv_segments is None:
+            kv_segments = q_segments
+        smask = (q_segments[:, None, None, :, None]
+                 == kv_segments[:, None, None, None, :])
+        logits = jnp.where(smask, logits, -jnp.inf)
+        # safe softmax: a query whose segment matches no key has an all
+        # -inf row; emit 0 for it instead of NaN
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.where(jnp.isfinite(logits),
+                      jnp.exp(logits - jnp.where(jnp.isfinite(m), m, 0.0)),
+                      0.0)
+        probs = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
     return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def segment_attention_ref(q, k, v, segments) -> jnp.ndarray:
+    """Graph-attention oracle: q/k/v [N, H, D], segments [N] int32.
+    Within-segment (per graph component) softmax attention; rows attend
+    exactly to rows sharing their segment id.  Backward pass for the
+    flash graph-attention conv's custom VJP."""
+    seg = segments[None]
+    return attention_ref(q[None], k[None], v[None], seg, seg,
+                         causal=False)[0]

@@ -1,0 +1,84 @@
+"""Flash-attention-backed graph attention over a node set.
+
+`GraphSelfAttention` is the dense counterpart of the edge-wise attention
+convs in `repro.core.convolutions`: instead of restricting attention to
+the edges of an edge set, every node attends to every other node of its
+own graph component (a "graph transformer" block in the sense of
+Dwivedi & Bresson).  On the fixed-capacity GraphTensor this is exactly
+segment-masked softmax attention over the padded [N, H, Dh] node tensor
+with `component_ids()` as the segment vector — which is what the Pallas
+flash-attention kernel computes without ever materialising the [N, N]
+logit matrix.
+
+Routing goes through `repro.kernels.dispatch.graph_attention`, the same
+registry/eligibility layer as the segment kernels: the flash kernel runs
+when eligible (`graph_attention_decision`), with a custom VJP whose
+backward pass differentiates the einsum reference; otherwise the einsum
+reference (`segment_attention_ref`) runs directly.  Parity between the
+two paths is asserted in tests/test_gnn_models.py and gated in
+`make smoke` (examples/gat_flash_parity.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_tensor import GraphTensor, HIDDEN_STATE
+from repro.kernels import dispatch as kernel_dispatch
+from repro.nn.layers import Linear
+from repro.nn.module import Module
+
+
+class GraphSelfAttention(Module):
+    """Multi-head within-component self-attention over one node set.
+
+    q/k/v are Linear projections of the node feature reshaped to
+    [N, num_heads, per_head_channels]; attention is restricted to each
+    node's graph component via the segment-masked flash kernel (padding
+    rows carry the one-past-last component id, so they attend only among
+    themselves and produce values that downstream masks discard).
+    Returns [N, num_heads * per_head_channels] after the output
+    projection.
+    """
+
+    def __init__(self, num_heads: int, per_head_channels: int, in_dim: int,
+                 *, feature_name: str = HIDDEN_STATE, use_out_proj: bool = True,
+                 name: str = "graph_self_attention"):
+        self.num_heads = num_heads
+        self.per_head = per_head_channels
+        self.feature_name = feature_name
+        self.use_out_proj = use_out_proj
+        self.name = name
+        out = num_heads * per_head_channels
+        self.wq = Linear(in_dim, out, use_bias=False, kernel_axes=(None, None))
+        self.wk = Linear(in_dim, out, use_bias=False, kernel_axes=(None, None))
+        self.wv = Linear(in_dim, out, use_bias=False, kernel_axes=(None, None))
+        self.wo = (Linear(out, out, use_bias=False, kernel_axes=(None, None))
+                   if use_out_proj else None)
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        p = {"wq": self.wq.init(ks[0]), "wk": self.wk.init(ks[1]),
+             "wv": self.wv.init(ks[2])}
+        if self.wo is not None:
+            p["wo"] = self.wo.init(ks[3])
+        return p
+
+    def _split(self, t):
+        return t.reshape(t.shape[0], self.num_heads, self.per_head)
+
+    def __call__(self, params, graph: GraphTensor, node_set_name: str):
+        ns = graph.node_sets[node_set_name]
+        x = ns[self.feature_name]
+        q = self._split(self.wq(params["wq"], x))
+        k = self._split(self.wk(params["wk"], x))
+        v = self._split(self.wv(params["wv"], x))
+        # component_ids() maps padding rows to num_components (one past the
+        # last real component), so padded rows form their own segment and
+        # never mix with real nodes
+        segments = ns.component_ids().astype(jnp.int32)
+        out = kernel_dispatch.graph_attention(q, k, v, segments)
+        out = out.reshape(out.shape[0], -1)
+        if self.wo is not None:
+            out = self.wo(params["wo"], out)
+        return out

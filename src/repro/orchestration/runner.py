@@ -22,6 +22,7 @@ import numpy as np
 from repro.core.graph_tensor import GraphTensor, HIDDEN_STATE
 from repro.core import ops
 from repro.distributed.fault_tolerance import CheckpointManager
+from repro.kernels import dispatch as kernel_dispatch
 from repro.nn.module import Module, split_params
 from repro.nn.layers import Linear
 from repro.train.optimizer import AdamW, warmup_cosine
@@ -139,7 +140,8 @@ def run(*, train_batches: Optional[Callable[[int],
         sampler: str = "in_process",
         service=None,
         label_fn: Optional[Callable[[GraphTensor], np.ndarray]] = None,
-        double_buffer: Optional[bool] = None) -> RunResult:
+        double_buffer: Optional[bool] = None,
+        edges_sorted_by_target: Optional[bool] = None) -> RunResult:
     """The paper's runner.run(): wires data, model, task, trainer.
 
     model_fn() -> (init_states_module, gnn_module); both take/return
@@ -156,6 +158,15 @@ def run(*, train_batches: Optional[Callable[[int],
     decode and `put_super_batch` all overlap the previous train step.
     ``double_buffer`` overrides the per-sampler default (service: on,
     in_process: off).
+
+    ``edges_sorted_by_target`` declares the edge layout of the incoming
+    batch stream to the kernel dispatch layer (`dispatch.layout`): True
+    means every edge set arrives stable-sorted by (component, target id)
+    — the default the batch producers now emit — which lets dispatch
+    pick contiguous-run segment kernels.  ``None`` resolves to the
+    service's ``plan.edges_sorted_by_target`` bit (service sampler) or
+    the `GraphBatcher` default True (in-process).  Purely a performance
+    hint: a wrong value can cost speed, never correctness.
 
     With ``num_devices`` the runner trains over the 2-D
     ``("data", "model")`` mesh of ``repro.distributed.partition``:
@@ -203,6 +214,16 @@ def run(*, train_batches: Optional[Callable[[int],
                          "(want 'in_process' or 'service')")
     if double_buffer is None:
         double_buffer = sampler == "service"
+    if edges_sorted_by_target is None:
+        # service: trust the plan's layout bit when the handle exposes it
+        # (a RemoteStreamClient does not carry the producer's plan — fall
+        # back to the fleet-wide default; a wrong hint costs kernel speed,
+        # never correctness); in_process: GraphBatcher sorts by
+        # (component, target) by default
+        plan = getattr(service, "plan", None) if sampler == "service" \
+            else None
+        edges_sorted_by_target = bool(getattr(
+            plan, "edges_sorted_by_target", True))
 
     init_states, gnn = model_fn()
     head = task.head()
@@ -279,57 +300,60 @@ def run(*, train_batches: Optional[Callable[[int],
     step = 0
     last_loss = float("nan")
     t0 = time.time()
-    for epoch in range(epochs):
-        if max_steps is not None and step >= max_steps:
-            break
-        if double_buffer:
-            from repro.train.train_loop import device_prefetch
-            placed = device_prefetch(batches_fn(epoch), place)
-        else:
-            placed = (place(g, l) for g, l in batches_fn(epoch))
-        for graph, labels in placed:
+    # the layout hint is read at trace time by kernel dispatch, so the
+    # context must enclose the first train/eval step (where jit traces)
+    with kernel_dispatch.layout(sorted_by_target=edges_sorted_by_target):
+        for epoch in range(epochs):
             if max_steps is not None and step >= max_steps:
-                placed.close()  # joins the device_prefetch thread
                 break
-            if plan is not None:
-                if dp_train_step is None:
-                    from repro.core.graph_tensor import stack_size
-                    dp_train_step = partition.make_train_step(
-                        plan, loss_fn, opt, num_groups=stack_size(graph))
-                    params = plan.replicate(params)
-                    # ZeRO-1: AdamW m/v land "data"-sharded
-                    opt_state = plan.place_opt_state(opt, params,
-                                                     opt_state)
-                params, opt_state, loss = dp_train_step(
-                    params, opt_state, graph, labels)
+            if double_buffer:
+                from repro.train.train_loop import device_prefetch
+                placed = device_prefetch(batches_fn(epoch), place)
             else:
-                params, opt_state, loss = train_step(params, opt_state,
-                                                     graph, labels)
-            step += 1
-            last_loss = float(loss)
-            if step % log_every == 0 and is_main:
-                print(f"epoch {epoch} step {step} loss {last_loss:.4f} "
-                      f"({log_every / (time.time() - t0):.1f} it/s)",
-                      flush=True)
-                t0 = time.time()
-            if mgr is not None and is_main and mgr.should_save(step):
-                mgr.save_async(step, (params, opt_state))
+                placed = (place(g, l) for g, l in batches_fn(epoch))
+            for graph, labels in placed:
+                if max_steps is not None and step >= max_steps:
+                    placed.close()  # joins the device_prefetch thread
+                    break
+                if plan is not None:
+                    if dp_train_step is None:
+                        from repro.core.graph_tensor import stack_size
+                        dp_train_step = partition.make_train_step(
+                            plan, loss_fn, opt, num_groups=stack_size(graph))
+                        params = plan.replicate(params)
+                        # ZeRO-1: AdamW m/v land "data"-sharded
+                        opt_state = plan.place_opt_state(opt, params,
+                                                         opt_state)
+                    params, opt_state, loss = dp_train_step(
+                        params, opt_state, graph, labels)
+                else:
+                    params, opt_state, loss = train_step(params, opt_state,
+                                                         graph, labels)
+                step += 1
+                last_loss = float(loss)
+                if step % log_every == 0 and is_main:
+                    print(f"epoch {epoch} step {step} loss {last_loss:.4f} "
+                          f"({log_every / (time.time() - t0):.1f} it/s)",
+                          flush=True)
+                    t0 = time.time()
+                if mgr is not None and is_main and mgr.should_save(step):
+                    mgr.save_async(step, (params, opt_state))
 
-    metrics = {}
-    if eval_batches is not None:
-        correct = total = 0.0
-        for graph, labels in eval_batches():
-            graph, labels = place(graph, labels)
-            if plan is not None:
-                if dp_eval_step is None:
-                    dp_eval_step = partition.make_eval_step(plan,
-                                                            metric_fn)
-                c, n = dp_eval_step(params, graph, labels)
-            else:
-                c, n = eval_step(params, graph, labels)
-            correct += float(c)
-            total += float(n)
-        metrics["eval_accuracy"] = correct / max(total, 1.0)
+        metrics = {}
+        if eval_batches is not None:
+            correct = total = 0.0
+            for graph, labels in eval_batches():
+                graph, labels = place(graph, labels)
+                if plan is not None:
+                    if dp_eval_step is None:
+                        dp_eval_step = partition.make_eval_step(plan,
+                                                                metric_fn)
+                    c, n = dp_eval_step(params, graph, labels)
+                else:
+                    c, n = eval_step(params, graph, labels)
+                correct += float(c)
+                total += float(n)
+            metrics["eval_accuracy"] = correct / max(total, 1.0)
     if mgr is not None and is_main:
         mgr.save_async(step, (params, opt_state))
         mgr.wait()

@@ -114,7 +114,7 @@ class SamplingService:
                  rank: int = 0, world: int = 1, base_seed: int = 0,
                  backend: str = "process", respawn: bool = False,
                  transport: Optional[Transport] = None,
-                 edges_sorted_by_target: bool = False,
+                 edges_sorted_by_target: bool = True,
                  num_shards: Optional[int] = None, listen_port: int = 0,
                  accept_timeout: float = 60.0,
                  on_listen: Optional[callable] = None):

@@ -185,11 +185,14 @@ def test_decision_eligibility_rules():
         int_sum = dispatch.segment_reduce_decision((10, 8), jnp.int32, 16,
                                                    "sum")
         assert not int_sum.use_kernel
-        # max materialises [E_blk, N, D]: the largest envelope shape no
-        # longer fits the VMEM budget and must fall back
+        # one-hot max materialises [E_blk, N, D] and stops fitting at the
+        # largest envelope shape — the CSR-run variant has no N term per
+        # edge and takes over as the VMEM fallback
+        assert dispatch.choose_e_block(4096, 256, reduce="max") == 0
         vmem = dispatch.segment_reduce_decision(
             (10_000, 256), jnp.float32, 4096, "max")
-        assert not vmem.use_kernel and "VMEM" in vmem.reason
+        assert vmem.use_kernel and vmem.variant == "runs"
+        assert "runs" in vmem.reason
 
 
 def test_empty_inputs_route_to_reference():
@@ -247,9 +250,175 @@ def test_choose_e_block_scales_with_capacity():
 
 def test_registry_contents():
     reg = dispatch.registry()
-    assert set(reg) >= {"segment_pool", "edge_mpnn"}
+    assert set(reg) >= {"segment_pool", "edge_mpnn", "graph_attention"}
     for entry in reg.values():
         assert callable(entry.kernel) and callable(entry.reference)
+
+
+# ---------------------------------------------------------------------------
+# Layout hint and variant choice
+# ---------------------------------------------------------------------------
+
+def test_layout_context_steers_variant_choice():
+    """The ambient layout() hint (BatchPlan.edges_sorted_by_target at
+    trace time) flips the preferred variant; explicit sorted_ids wins
+    over the context."""
+    shape, n = (1000, 64), 256
+    with kernels_on():
+        default = dispatch.segment_reduce_decision(shape, jnp.float32, n)
+        assert default.use_kernel and default.variant == "onehot"
+        assert "[unsorted]" in default.reason
+        with dispatch.layout(sorted_by_target=True):
+            hinted = dispatch.segment_reduce_decision(shape, jnp.float32, n)
+            assert hinted.use_kernel and hinted.variant == "runs"
+            assert "[sorted]" in hinted.reason
+            # explicit argument overrides the ambient context
+            explicit = dispatch.segment_reduce_decision(
+                shape, jnp.float32, n, sorted_ids=False)
+            assert explicit.variant == "onehot"
+        assert not dispatch.layout_sorted_by_target()  # restored
+
+
+def test_layout_hint_is_performance_only():
+    """A WRONG layout hint (claiming unsorted ids are sorted) still
+    produces exact results — the run-scan kernel handles any id order."""
+    rng = np.random.default_rng(7)
+    vals = jnp.asarray(rng.standard_normal((300, 16)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 40, 300).astype(np.int32))
+    ref = dispatch.segment_pool_ref(vals, segs, n_segments=40, reduce="sum")
+    with kernels_on(), dispatch.layout(sorted_by_target=True):
+        dec = dispatch.segment_reduce_decision(vals.shape, vals.dtype, 40)
+        assert dec.variant == "runs"  # lied about the layout
+        out = dispatch.segment_reduce(vals, segs, 40, "sum")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mpnn_layout_context_steers_variant_choice():
+    with kernels_on():
+        base = dispatch.edge_mpnn_decision(512, 512, 32, 32, 64,
+                                           jnp.float32, "relu",
+                                           n_edges=2048)
+        assert base.use_kernel and base.variant == "onehot"
+        with dispatch.layout(sorted_by_target=True):
+            hinted = dispatch.edge_mpnn_decision(512, 512, 32, 32, 64,
+                                                 jnp.float32, "relu",
+                                                 n_edges=2048)
+            assert hinted.use_kernel and hinted.variant == "runs"
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache consultation
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_overrides_heuristic(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+    monkeypatch.setattr(autotune, "DEFAULT_CACHE_PATH",
+                        tmp_path / "autotune_cache.json")
+    autotune._LOADED.clear()
+    rec = autotune.tune_segment_pool(64, 16, reduce="sum", sorted_ids=True,
+                                     n_edges=256, iters=1)
+    assert rec["variant"] in ("onehot", "runs") and rec["e_block"] > 0
+    key = autotune.cache_key(
+        "segment_pool", n=64, d=16, dtype="float32", reduce="sum",
+        layout="sorted", backend=jax.default_backend())
+    assert autotune.lookup(key) == rec
+    with kernels_on():
+        dispatch.use_autotune(True)
+        try:
+            with dispatch.layout(sorted_by_target=True):
+                dec = dispatch.segment_reduce_decision(
+                    (256, 16), jnp.float32, 64)
+            assert dec.use_kernel
+            assert dec.reason.startswith("autotuned:")
+            assert dec.variant == rec["variant"]
+            assert dec.e_block == rec["e_block"]
+        finally:
+            dispatch.use_autotune(False)
+    # off by default: the same decision without autotune is heuristic
+    with kernels_on(), dispatch.layout(sorted_by_target=True):
+        dec = dispatch.segment_reduce_decision((256, 16), jnp.float32, 64)
+        assert dec.reason.startswith("kernel:")
+    autotune._LOADED.clear()
+
+
+def test_autotune_rejects_stale_e_block(tmp_path, monkeypatch):
+    """A cached e_block the current budget model no longer allows is
+    ignored (self-invalidation on budget-model change)."""
+    from repro.kernels import autotune
+    monkeypatch.setattr(autotune, "DEFAULT_CACHE_PATH",
+                        tmp_path / "autotune_cache.json")
+    autotune._LOADED.clear()
+    key = autotune.cache_key(
+        "segment_pool", n=64, d=16, dtype="float32", reduce="sum",
+        layout="sorted", backend=jax.default_backend())
+    autotune._store(key, {"variant": "onehot", "e_block": 1 << 20,
+                          "us": 1.0}, None)
+    with kernels_on():
+        dispatch.use_autotune(True)
+        try:
+            with dispatch.layout(sorted_by_target=True):
+                dec = dispatch.segment_reduce_decision(
+                    (256, 16), jnp.float32, 64)
+            assert dec.use_kernel and dec.reason.startswith("kernel:")
+        finally:
+            dispatch.use_autotune(False)
+    autotune._LOADED.clear()
+
+
+# ---------------------------------------------------------------------------
+# graph_attention (flash-backed dense within-component attention)
+# ---------------------------------------------------------------------------
+
+def _component_segments(sizes, capacity):
+    comp = np.repeat(np.arange(len(sizes)), sizes)
+    pad = np.full(capacity - len(comp), len(sizes))
+    return jnp.asarray(np.concatenate([comp, pad]).astype(np.int32))
+
+
+def test_graph_attention_parity_and_padding():
+    rng = np.random.default_rng(0)
+    sizes, cap = [5, 3, 9], 24  # 7 padding rows
+    q, k, v = (jnp.asarray(rng.standard_normal((cap, 2, 8))
+                           .astype(np.float32)) for _ in range(3))
+    segs = _component_segments(sizes, cap)
+    from repro.kernels.flash_attention.ref import segment_attention_ref
+    ref = segment_attention_ref(q, k, v, segs)
+    with kernels_on():
+        dec = dispatch.graph_attention_decision(cap, 2, 8, jnp.float32)
+        assert dec.use_kernel and dec.variant == "flash"
+        out = dispatch.graph_attention(q, k, v, segs)
+    np.testing.assert_allclose(np.asarray(out)[:17], np.asarray(ref)[:17],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_graph_attention_gradient_parity():
+    rng = np.random.default_rng(1)
+    cap = 16
+    segs = _component_segments([6, 6], cap)
+    q, k, v = (jnp.asarray(rng.standard_normal((cap, 2, 4))
+                           .astype(np.float32)) for _ in range(3))
+    mask = (np.arange(cap) < 12).astype(np.float32)[:, None, None]
+
+    def loss(qq, kk, vv):
+        out = dispatch.graph_attention(qq, kk, vv, segs)
+        return jnp.sum((out * mask) ** 2)
+
+    base = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    with kernels_on():
+        fused = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(fused, base):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_graph_attention_ineligible_falls_back():
+    dec = dispatch.graph_attention_decision(8, 1, 4, jnp.int32)
+    assert not dec.use_kernel  # integer dtype
+    with kernels_on():
+        toobig = dispatch.graph_attention_decision(
+            dispatch.MAX_SEGMENTS + 1, 1, 4, jnp.float32)
+        assert not toobig.use_kernel
 
 
 @pytest.mark.parametrize("reduce", ["sum", "mean", "max", "min"])
@@ -326,7 +495,8 @@ def test_worst_case_envelopes_are_dispatchable():
     budget model without a test telling you which side moved."""
     assert dispatch.WORST_CASE_ENVELOPES, "envelope table must not be empty"
     choosers = {"segment_pool": dispatch.choose_e_block,
-                "edge_mpnn": dispatch.choose_mpnn_e_block}
+                "edge_mpnn": dispatch.choose_mpnn_e_block,
+                "graph_attention": dispatch.choose_attention_block}
     registered = set(dispatch.registry())
     for key, params in dispatch.WORST_CASE_ENVELOPES.items():
         kernel = key.split(":", 1)[0]

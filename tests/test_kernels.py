@@ -4,9 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.segment_pool.kernel import segment_pool
+from repro.kernels.segment_pool.kernel import segment_pool, segment_pool_runs
 from repro.kernels.segment_pool.ref import segment_pool_ref
-from repro.kernels.edge_mpnn.kernel import edge_mpnn
+from repro.kernels.edge_mpnn.kernel import edge_mpnn, edge_mpnn_runs
 from repro.kernels.edge_mpnn.ref import edge_mpnn_ref
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -35,6 +35,55 @@ def test_segment_pool_sweep(e, n, d, dtype, reduce):
                                np.asarray(ref, np.float32), **tol(dtype))
 
 
+@pytest.mark.parametrize("e,n,d", [(64, 16, 8), (257, 40, 32),
+                                   (1024, 128, 128), (33, 7, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("reduce", ["sum", "max", "min"])
+@pytest.mark.parametrize("layout", ["sorted", "unsorted"])
+def test_segment_pool_runs_sweep(e, n, d, dtype, reduce, layout):
+    """CSR-run variant: exact for ANY id order (the segmented scan keys
+    on runs, not on global sortedness), sorted or not."""
+    rng = np.random.default_rng(e + n + d)
+    segs = rng.integers(0, n + 3, e).astype(np.int32)  # ids >= n = padding
+    if layout == "sorted":
+        segs = np.sort(segs)
+    vals = jnp.asarray(rng.standard_normal((e, d)).astype(np.float32)) \
+        .astype(dtype)
+    segs = jnp.asarray(segs)
+    out = segment_pool_runs(vals, segs, n_segments=n, reduce=reduce,
+                            e_block=128, interpret=True)
+    ref = segment_pool_ref(vals.astype(jnp.float32), segs, n_segments=n,
+                           reduce=reduce).astype(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_segment_pool_runs_1d_and_empty_segments():
+    vals = jnp.ones((6, 1))
+    segs = jnp.asarray([0, 0, 3, 3, 9, 9])  # segment 1,2 empty; 9 padding
+    out = segment_pool_runs(vals, segs, n_segments=5, reduce="sum",
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(out)[:, 0], [2, 0, 0, 2, 0])
+    out_max = segment_pool_runs(vals, segs, n_segments=5, reduce="max",
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_max)[:, 0],
+                                  [1, 0, 0, 1, 0])
+
+
+def test_segment_pool_runs_bitwise_matches_onehot_for_integer_sums():
+    """fp32 sums of integer-valued data are exact in any association
+    order, so the two variants must agree BIT FOR BIT — the property the
+    layout benchmark's parity gate checks."""
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.integers(-8, 8, (512, 32)).astype(np.float32))
+    segs = jnp.asarray(np.sort(rng.integers(0, 64, 512)).astype(np.int32))
+    a = segment_pool(vals, segs, n_segments=64, reduce="sum",
+                     e_block=128, interpret=True)
+    b = segment_pool_runs(vals, segs, n_segments=64, reduce="sum",
+                          e_block=128, interpret=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("e,ns,nt,ds,dt,m", [
     (100, 16, 24, 8, 8, 16), (500, 64, 32, 32, 16, 64),
     (129, 40, 50, 16, 24, 48)])
@@ -58,6 +107,38 @@ def test_edge_mpnn_sweep(e, ns, nt, ds, dt, m, dtype, activation):
                                **tol(dtype))
 
 
+@pytest.mark.parametrize("e,ns,nt,ds,dt,m", [
+    (100, 16, 24, 8, 8, 16), (500, 64, 32, 32, 16, 64),
+    (129, 40, 50, 16, 24, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("activation", ["relu", "gelu"])
+@pytest.mark.parametrize("layout", ["sorted", "unsorted"])
+def test_edge_mpnn_runs_sweep(e, ns, nt, ds, dt, m, dtype, activation,
+                              layout):
+    rng = np.random.default_rng(e)
+    hs = jnp.asarray(rng.standard_normal((ns, ds)).astype(np.float32)) \
+        .astype(dtype)
+    ht = jnp.asarray(rng.standard_normal((nt, dt)).astype(np.float32)) \
+        .astype(dtype)
+    src = rng.integers(0, ns, e).astype(np.int32)
+    tgt = rng.integers(0, nt + 4, e).astype(np.int32)
+    if layout == "sorted":
+        order = np.argsort(tgt, kind="stable")
+        src, tgt = src[order], tgt[order]
+    src, tgt = jnp.asarray(src), jnp.asarray(tgt)
+    w = jnp.asarray((0.3 * rng.standard_normal((ds + dt, m)))
+                    .astype(np.float32)).astype(dtype)
+    b = jnp.zeros((m,), dtype)
+    out = edge_mpnn_runs(hs, ht, src, tgt, w, b, n_src=ns, n_tgt=nt,
+                         e_block=128, activation=activation,
+                         interpret=True)
+    ref = edge_mpnn_ref(hs, ht, src, tgt, w, b, n_src=ns, n_tgt=nt,
+                        activation=activation)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               **tol(dtype))
+
+
 @pytest.mark.parametrize("b,s,h,kh,d", [(1, 128, 4, 4, 32),
                                         (2, 256, 8, 2, 64),
                                         (1, 64, 2, 1, 16)])
@@ -73,6 +154,28 @@ def test_flash_attention_sweep(b, s, h, kh, d, causal, dtype):
     ref = attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("s,h,d", [(128, 2, 16), (256, 4, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_segment_mask_sweep(s, h, d, dtype):
+    """Segment-masked (non-causal) flash: rows attend only within their
+    segment; sentinel-segment rows (matching no key) emit exact zeros."""
+    rng = np.random.default_rng(s)
+    q, k, v = (jnp.asarray(rng.standard_normal((1, s, h, d))
+                           .astype(np.float32)).astype(dtype)
+               for _ in range(3))
+    n_valid = s - 32
+    comp = np.sort(rng.integers(0, 5, n_valid)).astype(np.int32)
+    q_seg = jnp.asarray(np.concatenate([comp, np.full(32, -1)]))[None]
+    kv_seg = jnp.asarray(np.concatenate([comp, np.full(32, -2)]))[None]
+    out = flash_attention(q, k, v, q_seg, kv_seg, causal=False,
+                          q_block=64, kv_block=64, interpret=True)
+    ref = attention_ref(q, k, v, q_seg, kv_seg, causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+    # fully-masked sentinel rows are EXACT zeros (the l=0 guard)
+    assert not np.asarray(out, np.float32)[0, n_valid:].any()
 
 
 def test_kernel_backed_pool_matches_ops(graph):

@@ -133,6 +133,49 @@ def test_stream_matches_in_process_batcher(problem, num_workers):
                 assert_graphs_equal(g, w)
 
 
+@pytest.mark.parametrize("sort_bit", [True, False])
+def test_stream_bit_identity_either_edge_layout(problem, sort_bit):
+    """The service and the in-process batcher stay bit-identical with
+    edges sorted by target (the new default) AND with the opt-out — the
+    layout bit is part of the shared BatchPlan contract, not a
+    service-side transform."""
+    store, spec, roots, graphs, sizes = problem
+    batcher = GraphBatcher(graphs, 16, sizes, seed=0, num_replicas=2,
+                           edges_sorted_by_target=sort_bit)
+    assert batcher.plan.edges_sorted_by_target is sort_bit
+    with SamplingService(store, spec, roots, batch_size=16, sizes=sizes,
+                         num_workers=2, num_replicas=2, seed=0,
+                         edges_sorted_by_target=sort_bit) as svc:
+        got = list(svc.epoch(0))
+        want = list(batcher.epoch(0))
+        assert len(got) == len(want) == svc.num_steps
+        for g, w in zip(got, want):
+            assert_graphs_equal(g, w)
+
+
+def test_sorted_layout_is_pure_edge_reorder(problem):
+    """Sorted vs unsorted batches carry the SAME edge multiset per edge
+    set (sorting never drops/duplicates), and the sorted stream's target
+    ids are non-decreasing within each component."""
+    store, spec, roots, graphs, sizes = problem
+    b_sorted = GraphBatcher(graphs, 8, sizes, seed=0,
+                            edges_sorted_by_target=True)
+    b_unsorted = GraphBatcher(graphs, 8, sizes, seed=0,
+                              edges_sorted_by_target=False)
+    for gs, gu in zip(b_sorted.epoch(0), b_unsorted.epoch(0)):
+        for name in gs.edge_sets:
+            es, eu = gs.edge_sets[name], gu.edge_sets[name]
+            pairs_s = sorted(zip(np.asarray(es.adjacency.source).tolist(),
+                                 np.asarray(es.adjacency.target).tolist()))
+            pairs_u = sorted(zip(np.asarray(eu.adjacency.source).tolist(),
+                                 np.asarray(eu.adjacency.target).tolist()))
+            assert pairs_s == pairs_u
+            n_valid = int(np.asarray(es.sizes).sum())
+            tgt = np.asarray(es.adjacency.target)[:n_valid]
+            assert np.all(np.diff(tgt) >= 0)  # globally non-decreasing
+        break  # one step is enough
+
+
 def test_stream_start_step_skip(problem):
     store, spec, roots, graphs, sizes = problem
     batcher = GraphBatcher(graphs, 16, sizes, seed=0, num_replicas=2)

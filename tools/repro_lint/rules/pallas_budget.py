@@ -106,7 +106,7 @@ class PallasBudgetRule(Rule):
             decide = entry.args[3] if len(entry.args) >= 4 else None
             decide_name = decide.id if isinstance(decide, ast.Name) \
                 else None
-            registered[kname] = (node, _choose_fn_of(mod, decide_name))
+            registered[kname] = (node, _choose_fns_of(mod, decide_name))
 
         envelopes: dict[str, tuple[ast.AST, Optional[dict]]] = {}
         if env_node is not None:
@@ -118,7 +118,7 @@ class PallasBudgetRule(Rule):
                 envelopes[key] = (k, value if ok and isinstance(value, dict)
                                   else None)
 
-        for kname, (node, choose_name) in sorted(registered.items()):
+        for kname, (node, choose_names) in sorted(registered.items()):
             keys = [k for k in envelopes
                     if k == kname or k.startswith(kname + ":")]
             if not keys:
@@ -128,7 +128,13 @@ class PallasBudgetRule(Rule):
                     "WORST_CASE_ENVELOPES entry — nothing pins the "
                     "shapes it is expected to dispatch for")
                 continue
-            choose = ns.get(choose_name) if choose_name else None
+            # a decision fn may route through several choosers (e.g. a
+            # per-variant envelope split): try each extracted choose_*
+            # against the envelope's kwargs; a TypeError means "not this
+            # chooser", not a finding — only an envelope NO chooser
+            # accepts is broken
+            chooses = [(name, ns.get(name)) for name in choose_names
+                       if callable(ns.get(name))]
             for key in keys:
                 key_node, params = envelopes[key]
                 if params is None:
@@ -137,25 +143,31 @@ class PallasBudgetRule(Rule):
                         f"envelope {key!r} could not be evaluated as a "
                         "pure dict of parameters")
                     continue
-                if not callable(choose):
+                if not chooses:
                     yield mod.diag(
                         key_node, "PAL002",
-                        f"envelope {key!r}: the choose function for "
-                        f"kernel {kname!r} could not be extracted")
+                        f"envelope {key!r}: no choose function for "
+                        f"kernel {kname!r} could be extracted")
                     continue
-                try:
-                    block = choose(**params)
-                except TypeError as exc:
+                block = None
+                mismatches = []
+                for choose_name, choose in chooses:
+                    try:
+                        block = (choose_name, choose(**params))
+                        break
+                    except TypeError as exc:
+                        mismatches.append(f"{choose_name}: {exc}")
+                if block is None:
                     yield mod.diag(
                         key_node, "PAL002",
-                        f"envelope {key!r} does not match "
-                        f"{choose_name}'s signature: {exc}")
+                        f"envelope {key!r} matches no choose function's "
+                        f"signature ({'; '.join(mismatches)})")
                     continue
-                if block == 0:
+                if block[1] == 0:
                     yield mod.diag(
                         key_node, "PAL002",
                         f"envelope {key!r} ({params}) exceeds the VMEM "
-                        f"budget: {choose_name} returns 0, so the "
+                        f"budget: {block[0]} returns 0, so the "
                         "kernel would never dispatch at its declared "
                         "worst case")
 
@@ -168,15 +180,20 @@ class PallasBudgetRule(Rule):
                     f"(registered: {sorted(registered)})")
 
 
-def _choose_fn_of(mod: ParsedModule,
-                  decide_name: Optional[str]) -> Optional[str]:
+def _choose_fns_of(mod: ParsedModule,
+                   decide_name: Optional[str]) -> list[str]:
+    """Every distinct ``choose_*`` callee inside the decision function,
+    in call order (a decision fn that splits per variant may consult
+    more than one chooser)."""
+    names: list[str] = []
     if decide_name is None:
-        return None
+        return names
     for node in mod.tree.body:
         if isinstance(node, ast.FunctionDef) and node.name == decide_name:
             for call in ast.walk(node):
                 if isinstance(call, ast.Call):
                     callee = dotted(call.func) or ""
-                    if callee.startswith("choose_"):
-                        return callee
-    return None
+                    if callee.startswith("choose_") \
+                            and callee not in names:
+                        names.append(callee)
+    return names
