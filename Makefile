@@ -74,6 +74,12 @@ smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	    $(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \
 	    --papers 320 --sampler service
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PYTHON) examples/graph_classification_train.py --steps 3 \
+	    --num-devices 8 --expect-loss 1.3365
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PYTHON) examples/link_prediction_train.py --steps 3 \
+	    --num-devices 8 --expect-loss 2.6875
 
 smoke-multihost:
 	$(PYTHON) examples/ogbn_mag_train.py --steps 3 --num-devices 8 \

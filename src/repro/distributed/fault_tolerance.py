@@ -81,14 +81,24 @@ def save_checkpoint(directory: str, step: int, state: PyTree, *,
     return ckpt_dir
 
 
-def latest_checkpoint(directory: str) -> Optional[str]:
-    pointer = os.path.join(directory, "latest")
+def _read_pointer(directory: str, pointer_name: str) -> Optional[str]:
+    pointer = os.path.join(directory, pointer_name)
     if not os.path.exists(pointer):
         return None
     with open(pointer) as f:
         name = f.read().strip()
     path = os.path.join(directory, name)
     return path if os.path.exists(path) else None
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    return _read_pointer(directory, "latest")
+
+
+def best_checkpoint(directory: str) -> Optional[str]:
+    """The checkpoint the `best` pointer names (see
+    `CheckpointManager.mark_best`), or None."""
+    return _read_pointer(directory, "best")
 
 
 def restore_checkpoint(path: str, state_like: PyTree, *,
@@ -192,17 +202,42 @@ class CheckpointManager:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def mark_best(self, step: int) -> None:
+        """Point the `best` pointer at ``step``'s checkpoint (atomic; the
+        named checkpoint is then exempt from retention GC, so
+        ``keep=``-bounded runs keep their best model however old it is).
+        Call after the step's save has landed (`wait()`)."""
+        name = f"step_{step:010d}"
+        if not os.path.isdir(os.path.join(self.directory, name)):
+            raise FileNotFoundError(
+                f"mark_best({step}): no checkpoint {name} in "
+                f"{self.directory} (save and wait() first)")
+        with open(os.path.join(self.directory, "best.tmp"), "w") as f:
+            f.write(name)
+        os.replace(os.path.join(self.directory, "best.tmp"),
+                   os.path.join(self.directory, "best"))
+
     def _gc(self):
         if not os.path.isdir(self.directory):
             return
+        best = best_checkpoint(self.directory)
+        best_name = os.path.basename(best) if best else None
         ckpts = sorted(d for d in os.listdir(self.directory)
                        if d.startswith("step_") and not d.endswith(".tmp"))
         for old in ckpts[:-self.keep]:
+            if old == best_name:  # the best pointer pins its target
+                continue
             shutil.rmtree(os.path.join(self.directory, old),
                           ignore_errors=True)
 
     def restore_latest(self, state_like: PyTree, *, shardings=None):
         path = latest_checkpoint(self.directory)
+        if path is None:
+            return None
+        return restore_checkpoint(path, state_like, shardings=shardings)
+
+    def restore_best(self, state_like: PyTree, *, shardings=None):
+        path = best_checkpoint(self.directory)
         if path is None:
             return None
         return restore_checkpoint(path, state_like, shardings=shardings)

@@ -1,3 +1,10 @@
-from repro.orchestration.runner import (  # noqa
-    GraphBinaryClassification, RootNodeMulticlassClassification, RunResult,
-    Task, run)
+from repro.orchestration.tasks import (  # noqa
+    DeepGraphInfomax, GraphBinaryClassification,
+    GraphMulticlassClassification, LinkPrediction,
+    RootNodeMulticlassClassification, Task)
+from repro.orchestration.providers import (  # noqa
+    BatcherProvider, DatasetProvider, IteratorProvider, ServiceProvider,
+    StoreProvider)
+from repro.orchestration.evaluation import EarlyStopping, evaluate  # noqa
+from repro.orchestration.trainer import RunResult, Trainer  # noqa
+from repro.orchestration.runner import run  # noqa

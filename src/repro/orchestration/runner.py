@@ -1,124 +1,36 @@
 """API Level 4 — the Orchestrator (paper §5 / §8.4).
 
-Composable pieces mirroring the paper's runner:
+This module is now a thin compatibility shim: the orchestration layer
+proper lives in three protocol modules —
 
-  DatasetProvider  -> GraphTensor stream (+ schema)
-  Task             -> adapts a base GNN to an objective (readout + loss)
-  Trainer          -> optimization loop w/ checkpointing + validation
-  run(...)         -> wires them together
+  `repro.orchestration.tasks`      Task: head + labels + loss + metrics
+  `repro.orchestration.providers`  DatasetProvider: the batch stream
+  `repro.orchestration.trainer`    Trainer: mesh, steps, checkpoints
 
-Minimal-code experience: see examples/ogbn_mag_train.py.
+`run(...)` maps its historical kwargs onto those pieces and delegates to
+`Trainer.fit`.  The composition is kwarg-for-kwarg the seed runner's, so
+the loss trajectory is bit-for-bit unchanged (pinned in
+tests/test_runner_parity.py).  New code should build a Task, a
+DatasetProvider and a Trainer directly — see
+src/repro/orchestration/README.md for the migration map.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Iterator, Optional, Sequence
+from typing import Callable, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph_tensor import GraphTensor, HIDDEN_STATE
-from repro.core import ops
-from repro.distributed.fault_tolerance import CheckpointManager
-from repro.kernels import dispatch as kernel_dispatch
-from repro.nn.module import Module, split_params
-from repro.nn.layers import Linear
-from repro.train.optimizer import AdamW, warmup_cosine
-
-
-# ---------------------------------------------------------------------------
-# Tasks
-# ---------------------------------------------------------------------------
-
-class Task:
-    """Adapts model output (a GraphTensor) to an objective."""
-
-    def head(self) -> Module:  # trainable readout head
-        raise NotImplementedError
-
-    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
-        raise NotImplementedError
-
-    def loss(self, logits, labels, weights) -> jnp.ndarray:
-        raise NotImplementedError
-
-
-class RootNodeMulticlassClassification(Task):
-    """Paper §8.4: classify the root node (index 0 of each component) of a
-    sampled subgraph.  Labels: [C] int32 per component; padding components
-    carry weight 0 via context.sizes."""
-
-    def __init__(self, node_set_name: str, num_classes: int,
-                 hidden_dim: int):
-        self.node_set_name = node_set_name
-        self.num_classes = num_classes
-        self.hidden_dim = hidden_dim
-
-    def head(self) -> Module:
-        return Linear(self.hidden_dim, self.num_classes)
-
-    @staticmethod
-    def root_labels(sizes_row: np.ndarray, labels_row: np.ndarray
-                    ) -> np.ndarray:
-        """Host-side counterpart of :meth:`root_states`: per-component
-        root (= first node) labels from one padded node set's ``sizes``
-        row and per-node labels row.  The single owner of the
-        root-index-is-component-start contract for data pipelines."""
-        starts = np.concatenate([[0], np.cumsum(sizes_row)[:-1]])
-        return labels_row[np.minimum(starts, len(labels_row) - 1)]
-
-    def root_states(self, graph: GraphTensor) -> jnp.ndarray:
-        """Hidden state of each component's root = first node (the sampler
-        puts the seed first; see repro.data.sampling)."""
-        ns = graph.node_sets[self.node_set_name]
-        sizes = ns.sizes
-        starts = jnp.concatenate([jnp.zeros(1, sizes.dtype),
-                                  jnp.cumsum(sizes)[:-1]])
-        return jnp.take(ns[HIDDEN_STATE],
-                        jnp.minimum(starts, ns.capacity - 1), axis=0)
-
-    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
-        return Linear(self.hidden_dim, self.num_classes)(
-            head_params, self.root_states(graph))
-
-    def loss(self, logits, labels, weights):
-        logz = jax.nn.logsumexp(logits, axis=-1)
-        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-        nll = (logz - ll) * weights
-        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
-
-
-class GraphBinaryClassification(Task):
-    """Graph-level binary objective via mean-pooled node states."""
-
-    def __init__(self, node_set_name: str, hidden_dim: int):
-        self.node_set_name = node_set_name
-        self.hidden_dim = hidden_dim
-
-    def head(self) -> Module:
-        return Linear(self.hidden_dim, 1)
-
-    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
-        pooled = ops.pool_nodes_to_context(
-            graph, self.node_set_name, "mean", feature_name=HIDDEN_STATE)
-        return Linear(self.hidden_dim, 1)(head_params, pooled)[:, 0]
-
-    def loss(self, logits, labels, weights):
-        nll = (jax.nn.softplus(logits) - logits * labels) * weights
-        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
-
-
-# ---------------------------------------------------------------------------
-# Runner
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class RunResult:
-    step: int
-    train_loss: float
-    metrics: dict
+from repro.core.graph_tensor import GraphTensor
+# Re-exports: every pre-existing `from repro.orchestration.runner import X`
+# keeps working (benchmarks, serve, examples, tests).
+from repro.orchestration.tasks import (  # noqa: F401
+    DeepGraphInfomax, GraphBinaryClassification,
+    GraphMulticlassClassification, LinkPrediction,
+    RootNodeMulticlassClassification, Task)
+from repro.orchestration.providers import (IteratorProvider,
+                                           ServiceProvider)
+from repro.orchestration.trainer import RunResult, Trainer  # noqa: F401
+from repro.nn.module import Module
 
 
 def run(*, train_batches: Optional[Callable[[int],
@@ -145,259 +57,58 @@ def run(*, train_batches: Optional[Callable[[int],
     """The paper's runner.run(): wires data, model, task, trainer.
 
     model_fn() -> (init_states_module, gnn_module); both take/return
-    GraphTensors (MapFeatures-style + GraphUpdate stack).
-    train_batches(epoch) yields (padded GraphTensor, labels[C]).
-
-    ``sampler="service"`` swaps the data source for an async sampler
-    fleet: ``service`` is a `repro.sampling_service.SamplingService`
-    (its `epoch(e)` stream is bit-identical to the in-process
-    `GraphBatcher` on the same plan, so the loss trajectory matches),
-    ``label_fn(graph)`` extracts per-batch labels host-side, and the
-    host->device placement is double-buffered
-    (`repro.train.train_loop.device_prefetch`) so sampling, padding, wire
-    decode and `put_super_batch` all overlap the previous train step.
-    ``double_buffer`` overrides the per-sampler default (service: on,
-    in_process: off).
-
-    ``edges_sorted_by_target`` declares the edge layout of the incoming
-    batch stream to the kernel dispatch layer (`dispatch.layout`): True
-    means every edge set arrives stable-sorted by (component, target id)
-    — the default the batch producers now emit — which lets dispatch
-    pick contiguous-run segment kernels.  ``None`` resolves to the
-    service's ``plan.edges_sorted_by_target`` bit (service sampler) or
-    the `GraphBatcher` default True (in-process).  Purely a performance
-    hint: a wrong value can cost speed, never correctness.
-
-    With ``num_devices`` the runner trains over the 2-D
-    ``("data", "model")`` mesh of ``repro.distributed.partition``:
-    ``model_parallel`` devices form each model column (1 = the PR-2
-    data-only path), the remaining factor is data parallelism.
-    train_batches must yield stacked super-batches ([R, ...] component
-    groups from ``GraphBatcher(num_replicas=R)`` with R divisible by the
-    data size, labels [R, C]); scalar batches are promoted to [1, ...].
-    The train step is ``partition.make_train_step`` — per-shard
-    forward/backward with feature-dim all-gathers at the broadcast/pool
-    boundary, gradient pmean over the mesh, ZeRO-1 optimizer update on
-    "data"-sharded AdamW state — and batches are device_put with the
-    plan's 2-D NamedShardings (so the double-buffered placement lands
-    pre-sharded).  Loss equals the 1-device run on the same seed
-    (component groups are weighted equally, so the mean-of-group-means is
-    the global mean; feature chunks recompose exactly).
-
-    Under `jax.distributed` (``partition.initialize_distributed`` ran and
-    `jax.process_count() > 1`) the same call trains multi-host:
-    ``num_devices`` is the GLOBAL device count, ``train_batches`` (or the
-    service stream) must yield THIS PROCESS's rank shard of each step
-    (``GraphBatcher(rank, world)`` composing with ``num_replicas`` local
-    groups — or a `RemoteStreamClient` subscribed with its rank), and
-    `put_super_batch` assembles global arrays from the per-process
-    shards.  Loss/metrics are pmean/psum results replicated across
-    processes; only process 0 logs.  Checkpointing (``ckpt_dir``) is not
-    yet supported multi-process (ZeRO-1 optimizer shards are not
-    host-addressable from one process) and raises up front.  See
-    ``examples/ogbn_mag_train.py --multihost``.
+    GraphTensors.  train_batches(epoch) yields (padded GraphTensor,
+    labels[C]) — ``sampler="service"`` instead streams from ``service``
+    (a `repro.sampling_service.SamplingService`) with ``label_fn(graph)``
+    extracting labels host-side and double-buffered placement by
+    default.  With ``num_devices`` training runs over the 2-D
+    ``("data", "model")`` mesh of `repro.distributed.partition`
+    (``model_parallel`` devices per model column).  See the seed
+    docstring of this function in git history — semantics are unchanged;
+    the implementation now delegates to
+    `repro.orchestration.trainer.Trainer`.
     """
     if sampler == "service":
         if service is None or label_fn is None:
             raise ValueError("sampler='service' needs service= (a "
                              "SamplingService) and label_fn=")
-
-        def batches_fn(epoch):
-            for graph in service.epoch(epoch):
-                yield graph, label_fn(graph)
+        provider = ServiceProvider(service, label_fn=label_fn)
+        if edges_sorted_by_target is None:
+            # trust the plan's layout bit when the handle exposes it (a
+            # RemoteStreamClient does not carry the producer's plan —
+            # fall back to the fleet-wide default; a wrong hint costs
+            # kernel speed, never correctness)
+            edges_sorted_by_target = bool(getattr(
+                getattr(service, "plan", None), "edges_sorted_by_target",
+                True))
     elif sampler == "in_process":
         if train_batches is None:
             raise ValueError("sampler='in_process' needs train_batches=")
-        batches_fn = train_batches
+        provider = IteratorProvider(train_batches)
+        if edges_sorted_by_target is None:
+            # GraphBatcher sorts by (component, target) by default
+            edges_sorted_by_target = True
     else:
         raise ValueError(f"unknown sampler {sampler!r} "
                          "(want 'in_process' or 'service')")
     if double_buffer is None:
         double_buffer = sampler == "service"
-    if edges_sorted_by_target is None:
-        # service: trust the plan's layout bit when the handle exposes it
-        # (a RemoteStreamClient does not carry the producer's plan — fall
-        # back to the fleet-wide default; a wrong hint costs kernel speed,
-        # never correctness); in_process: GraphBatcher sorts by
-        # (component, target) by default
-        plan = getattr(service, "plan", None) if sampler == "service" \
-            else None
-        edges_sorted_by_target = bool(getattr(
-            plan, "edges_sorted_by_target", True))
 
-    init_states, gnn = model_fn()
-    head = task.head()
-    key = jax.random.PRNGKey(seed)
-    k1, k2, k3 = jax.random.split(key, 3)
-    params = {
-        "init": split_params(init_states.init(k1))[0],
-        "gnn": split_params(gnn.init(k2))[0],
-        "head": split_params(head.init(k3))[0],
-    }
-    opt = AdamW(learning_rate=warmup_cosine(learning_rate, 50, total_steps),
-                weight_decay=1e-5)
-    opt_state = opt.init(params)
+    eval_provider = (IteratorProvider(lambda epoch: eval_batches())
+                     if eval_batches is not None else None)
+    trainer = Trainer(
+        epochs=epochs, learning_rate=learning_rate,
+        total_steps=total_steps, seed=seed, num_devices=num_devices,
+        model_parallel=model_parallel, max_steps=max_steps,
+        log_every=log_every, double_buffer=double_buffer,
+        edges_sorted_by_target=edges_sorted_by_target, ckpt_dir=ckpt_dir,
+        eval_at="end" if eval_provider is not None else "never")
+    result = trainer.fit(model_fn, task, provider,
+                         eval_provider=eval_provider)
 
-    def forward(params, graph):
-        graph = init_states(params["init"], graph)
-        graph = gnn(params["gnn"], graph)
-        return task.predict(params["head"], graph)
-
-    def loss_fn(params, graph, labels):
-        logits = forward(params, graph)
-        weights = graph.context.sizes.astype(jnp.float32)
-        return task.loss(logits, labels, weights)
-
-    @jax.jit
-    def train_step(params, opt_state, graph, labels):
-        loss, grads = jax.value_and_grad(loss_fn)(params, graph, labels)
-        params, opt_state, om = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    def metric_fn(params, graph, labels):
-        logits = forward(params, graph)
-        weights = graph.context.sizes.astype(jnp.float32)
-        pred = jnp.argmax(logits, -1)
-        correct = ((pred == labels) * weights).sum()
-        return correct, weights.sum()
-
-    eval_step = jax.jit(metric_fn)
-
-    plan = None
-    dp_train_step = dp_eval_step = None
-    if num_devices is not None:
-        from repro.distributed import partition
-        plan = partition.make_plan(num_devices,
-                                   model_parallel=model_parallel)
-    elif model_parallel > 1:
-        raise ValueError("model_parallel > 1 needs num_devices=")
-    elif jax.process_count() > 1:
-        raise ValueError(
-            "multi-process (jax.distributed) training needs num_devices= "
-            "— the per-process jit path cannot see the global mesh")
-    # one process narrates / checkpoints for the whole job; the others
-    # compute the same replicated results and stay quiet
-    is_main = jax.process_index() == 0
-    if ckpt_dir and jax.process_count() > 1:
-        # fail fast, not at step save_interval: save_async materializes
-        # the full state host-side, and ZeRO-1 optimizer shards live on
-        # other processes' devices (non-addressable here)
-        raise ValueError(
-            "checkpointing (ckpt_dir=) is not yet supported under "
-            "multi-process jax.distributed — optimizer state is sharded "
-            "across processes; run with ckpt_dir=''")
-
-    def place(graph, labels):
-        """Host batch -> device batch (the plan's 2-D sharding in mesh
-        mode — `device_prefetch` then lands super-batches pre-sharded,
-        no resharding copy on the first step)."""
-        if plan is not None:
-            return plan.put_super_batch(graph, labels)
-        return (jax.tree_util.tree_map(jnp.asarray, graph),
-                jnp.asarray(labels))
-
-    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
-    step = 0
-    last_loss = float("nan")
-    t0 = time.time()
-    # the layout hint is read at trace time by kernel dispatch, so the
-    # context must enclose the first train/eval step (where jit traces)
-    with kernel_dispatch.layout(sorted_by_target=edges_sorted_by_target):
-        for epoch in range(epochs):
-            if max_steps is not None and step >= max_steps:
-                break
-            if double_buffer:
-                from repro.train.train_loop import device_prefetch
-                placed = device_prefetch(batches_fn(epoch), place)
-            else:
-                placed = (place(g, l) for g, l in batches_fn(epoch))
-            for graph, labels in placed:
-                if max_steps is not None and step >= max_steps:
-                    placed.close()  # joins the device_prefetch thread
-                    break
-                if plan is not None:
-                    if dp_train_step is None:
-                        from repro.core.graph_tensor import stack_size
-                        dp_train_step = partition.make_train_step(
-                            plan, loss_fn, opt, num_groups=stack_size(graph))
-                        params = plan.replicate(params)
-                        # ZeRO-1: AdamW m/v land "data"-sharded
-                        opt_state = plan.place_opt_state(opt, params,
-                                                         opt_state)
-                    params, opt_state, loss = dp_train_step(
-                        params, opt_state, graph, labels)
-                else:
-                    params, opt_state, loss = train_step(params, opt_state,
-                                                         graph, labels)
-                step += 1
-                last_loss = float(loss)
-                if step % log_every == 0 and is_main:
-                    print(f"epoch {epoch} step {step} loss {last_loss:.4f} "
-                          f"({log_every / (time.time() - t0):.1f} it/s)",
-                          flush=True)
-                    t0 = time.time()
-                if mgr is not None and is_main and mgr.should_save(step):
-                    mgr.save_async(step, (params, opt_state))
-
-        metrics = {}
-        if eval_batches is not None:
-            correct = total = 0.0
-            for graph, labels in eval_batches():
-                graph, labels = place(graph, labels)
-                if plan is not None:
-                    if dp_eval_step is None:
-                        dp_eval_step = partition.make_eval_step(plan,
-                                                                metric_fn)
-                    c, n = dp_eval_step(params, graph, labels)
-                else:
-                    c, n = eval_step(params, graph, labels)
-                correct += float(c)
-                total += float(n)
-            metrics["eval_accuracy"] = correct / max(total, 1.0)
-    if mgr is not None and is_main:
-        mgr.save_async(step, (params, opt_state))
-        mgr.wait()
-    metrics["params"] = params
-    return RunResult(step, last_loss, metrics)
-
-
-class DeepGraphInfomax(Task):
-    """Self-supervised DGI objective (paper §5 Task list): discriminate
-    node states of the real graph vs a feature-shuffled corruption against
-    a per-component summary vector (Velickovic et al. 2019)."""
-
-    def __init__(self, node_set_name: str, hidden_dim: int):
-        self.node_set_name = node_set_name
-        self.hidden_dim = hidden_dim
-
-    def head(self) -> Module:
-        # bilinear discriminator weight
-        return Linear(self.hidden_dim, self.hidden_dim, use_bias=False)
-
-    def logits_for(self, head_params, graph: GraphTensor,
-                   states: jnp.ndarray) -> jnp.ndarray:
-        summary = ops.pool_nodes_to_context(
-            graph, self.node_set_name, "mean", feature_value=states)
-        summary = jnp.tanh(summary)
-        proj = Linear(self.hidden_dim, self.hidden_dim, use_bias=False)(
-            head_params, states)
-        per_node_summary = ops.broadcast_context_to_nodes(
-            graph, self.node_set_name, feature_value=summary)
-        return (proj * per_node_summary).sum(-1)
-
-    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
-        ns = graph.node_sets[self.node_set_name]
-        return self.logits_for(head_params, graph, ns[HIDDEN_STATE])
-
-    def corrupt(self, graph: GraphTensor, rng) -> GraphTensor:
-        """Corruption: permute node features within the set."""
-        ns = graph.node_sets[self.node_set_name]
-        perm = jax.random.permutation(rng, ns.capacity)
-        feats = {k: jnp.take(v, perm, axis=0)
-                 for k, v in ns.features.items()}
-        return graph.replace_features(node_sets={self.node_set_name: feats})
-
-    def loss(self, logits, labels, weights):
-        # labels: 1 real / 0 corrupted per node; weights: node validity
-        nll = jax.nn.softplus(logits) - logits * labels
-        return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+    # legacy metrics surface
+    metrics = {}
+    if eval_provider is not None:
+        metrics["eval_accuracy"] = result.metrics["eval"]["accuracy"]
+    metrics["params"] = result.metrics["params"]
+    return RunResult(result.step, result.train_loss, metrics)

@@ -1,0 +1,405 @@
+"""Tasks — the objective-owning piece of the orchestration layer.
+
+A `Task` adapts a base GNN (which maps GraphTensor -> GraphTensor) to a
+training objective (paper §5: the runner's Task protocol).  It owns FOUR
+things, so a new graph-learning scenario costs a Task, not a fork of the
+training loop:
+
+  * the trainable readout **head** (`head() -> Module`),
+  * **label extraction** (`labels(graph, epoch=, step=)` — host-side,
+    replacing the old `runner.run(label_fn=)` kwarg),
+  * the **loss** (`loss_from_graph(head_params, graph, labels)` — device
+    side, called under jit/shard_map),
+  * **metrics** (`metrics(head_params, graph, labels)` — a dict of
+    ``(numerator, denominator)`` pairs so streams aggregate exactly:
+    the Trainer sums both sides over batches/shards and divides once).
+
+The legacy surface (`predict(head_params, graph)` +
+``loss(logits, labels, weights)``) is kept verbatim — every pre-existing
+caller (benchmarks, serve, tests) still works, and the graph-level
+methods default through it, so a legacy task IS a new-protocol task.
+
+Two batch layouts flow through every method: scalar GraphTensors and
+stacked ``[R, ...]`` super-batches.  Device-side methods always see a
+SCALAR graph (the Trainer/partition layer unstacks per component group);
+`labels` must handle both (it runs host-side on the raw stream).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph_tensor import GraphTensor, HIDDEN_STATE
+from repro.core import ops
+from repro.data.sampling import seed_rng
+from repro.nn.module import Module
+from repro.nn.layers import Linear
+
+
+def _context_weights(graph: GraphTensor) -> jnp.ndarray:
+    """Per-component training weight: 1 real, 0 padding."""
+    return graph.context.sizes.astype(jnp.float32)
+
+
+class Task:
+    """Adapts model output (a GraphTensor) to an objective."""
+
+    # -- legacy surface (kept verbatim) -------------------------------------
+
+    def head(self) -> Module:  # trainable readout head
+        raise NotImplementedError
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def loss(self, logits, labels, weights) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- the Trainer protocol ------------------------------------------------
+
+    def labels(self, graph: GraphTensor, *, epoch: int = 0,
+               step: int = 0) -> np.ndarray:
+        """Host-side label extraction from one (possibly stacked) batch.
+
+        Must be a pure function of ``(graph, epoch, step)`` — the stream
+        at a given (epoch, step) is bit-identical across samplers, fleet
+        sizes and shard counts, so labels derived this way inherit that
+        invariance (the property the link-prediction negative sampler
+        leans on)."""
+        raise NotImplementedError
+
+    def loss_from_graph(self, head_params, graph: GraphTensor,
+                        labels) -> jnp.ndarray:
+        """Device-side scalar loss for one SCALAR graph.  Default:
+        legacy predict + per-component context weights."""
+        return self.loss(self.predict(head_params, graph), labels,
+                         _context_weights(graph))
+
+    def metrics(self, head_params, graph: GraphTensor, labels) -> dict:
+        """Device-side metric accumulators for one SCALAR graph:
+        ``{name: (numerator, denominator)}``.  Default: the weighted
+        loss itself (so every task evaluates out of the box)."""
+        den = _context_weights(graph).sum()
+        return {"loss": (self.loss_from_graph(head_params, graph,
+                                              labels) * den, den)}
+
+    def metric_names(self) -> tuple:
+        """The SORTED keys `metrics` produces — host-side, no tracing
+        (the Trainer flattens metric pairs into a tuple for the sharded
+        eval step and needs the order up front; checked against the
+        traced dict)."""
+        return ("loss",)
+
+
+class RootNodeMulticlassClassification(Task):
+    """Paper §8.4: classify the root node (index 0 of each component) of a
+    sampled subgraph.  Labels: [C] int32 per component; padding components
+    carry weight 0 via context.sizes."""
+
+    def __init__(self, node_set_name: str, num_classes: int,
+                 hidden_dim: int, *, label_feature: str = "labels"):
+        self.node_set_name = node_set_name
+        self.num_classes = num_classes
+        self.hidden_dim = hidden_dim
+        self.label_feature = label_feature
+
+    def head(self) -> Module:
+        return Linear(self.hidden_dim, self.num_classes)
+
+    @staticmethod
+    def root_labels(sizes_row: np.ndarray, labels_row: np.ndarray
+                    ) -> np.ndarray:
+        """Host-side counterpart of :meth:`root_states`: per-component
+        root (= first node) labels from one padded node set's ``sizes``
+        row and per-node labels row.  The single owner of the
+        root-index-is-component-start contract for data pipelines."""
+        starts = np.concatenate([[0], np.cumsum(sizes_row)[:-1]])
+        return labels_row[np.minimum(starts, len(labels_row) - 1)]
+
+    def labels(self, graph: GraphTensor, *, epoch: int = 0,
+               step: int = 0) -> np.ndarray:
+        ns = graph.node_sets[self.node_set_name]
+        sizes = np.asarray(ns.sizes)
+        lab = np.asarray(ns[self.label_feature])
+        if sizes.ndim == 1:  # scalar batch
+            return self.root_labels(sizes, lab).astype(np.int32)
+        return np.stack([self.root_labels(sizes[r], lab[r])
+                         for r in range(sizes.shape[0])]).astype(np.int32)
+
+    def root_states(self, graph: GraphTensor) -> jnp.ndarray:
+        """Hidden state of each component's root = first node (the sampler
+        puts the seed first; see repro.data.sampling)."""
+        ns = graph.node_sets[self.node_set_name]
+        sizes = ns.sizes
+        starts = jnp.concatenate([jnp.zeros(1, sizes.dtype),
+                                  jnp.cumsum(sizes)[:-1]])
+        return jnp.take(ns[HIDDEN_STATE],
+                        jnp.minimum(starts, ns.capacity - 1), axis=0)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        return Linear(self.hidden_dim, self.num_classes)(
+            head_params, self.root_states(graph))
+
+    def loss(self, logits, labels, weights):
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        nll = (logz - ll) * weights
+        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
+
+    def metrics(self, head_params, graph: GraphTensor, labels) -> dict:
+        logits = self.predict(head_params, graph)
+        weights = _context_weights(graph)
+        correct = ((jnp.argmax(logits, -1) == labels) * weights).sum()
+        den = weights.sum()
+        return {"accuracy": (correct, den),
+                "loss": (self.loss(logits, labels, weights) * den, den)}
+
+    def metric_names(self) -> tuple:
+        return ("accuracy", "loss")
+
+
+class GraphBinaryClassification(Task):
+    """Graph-level binary objective via mean-pooled node states."""
+
+    def __init__(self, node_set_name: str, hidden_dim: int, *,
+                 label_feature: str = "label"):
+        self.node_set_name = node_set_name
+        self.hidden_dim = hidden_dim
+        self.label_feature = label_feature
+
+    def head(self) -> Module:
+        return Linear(self.hidden_dim, 1)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        pooled = ops.pool_nodes_to_context(
+            graph, self.node_set_name, "mean", feature_name=HIDDEN_STATE)
+        return Linear(self.hidden_dim, 1)(head_params, pooled)[:, 0]
+
+    def labels(self, graph: GraphTensor, *, epoch: int = 0,
+               step: int = 0) -> np.ndarray:
+        return np.asarray(graph.context[self.label_feature],
+                          np.float32)
+
+    def loss(self, logits, labels, weights):
+        nll = (jax.nn.softplus(logits) - logits * labels) * weights
+        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+class GraphMulticlassClassification(Task):
+    """Graph-level classification à la MUTAG (paper §5 Task list): one
+    label per component, read out from context-pooled node states.
+
+    Labels come from a per-component context feature (``label_feature``)
+    that each input graph carries into `merge_graphs`/`pad_to_sizes`
+    (padding components get label 0 at weight 0).  Pairs with a stacked
+    LGNN-style multi-layer model — see
+    ``examples/graph_classification_train.py``."""
+
+    def __init__(self, node_set_name: str, num_classes: int,
+                 hidden_dim: int, *, label_feature: str = "label",
+                 reduce_type: str = "mean"):
+        self.node_set_name = node_set_name
+        self.num_classes = num_classes
+        self.hidden_dim = hidden_dim
+        self.label_feature = label_feature
+        self.reduce_type = reduce_type
+
+    def head(self) -> Module:
+        return Linear(self.hidden_dim, self.num_classes)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        pooled = ops.pool_nodes_to_context(
+            graph, self.node_set_name, self.reduce_type,
+            feature_name=HIDDEN_STATE)
+        return Linear(self.hidden_dim, self.num_classes)(head_params,
+                                                         pooled)
+
+    def labels(self, graph: GraphTensor, *, epoch: int = 0,
+               step: int = 0) -> np.ndarray:
+        return np.asarray(graph.context[self.label_feature], np.int32)
+
+    def loss(self, logits, labels, weights):
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        nll = (logz - ll) * weights
+        return nll.sum() / jnp.maximum(weights.sum(), 1.0)
+
+    def metrics(self, head_params, graph: GraphTensor, labels) -> dict:
+        logits = self.predict(head_params, graph)
+        weights = _context_weights(graph)
+        correct = ((jnp.argmax(logits, -1) == labels) * weights).sum()
+        den = weights.sum()
+        return {"accuracy": (correct, den),
+                "loss": (self.loss(logits, labels, weights) * den, den)}
+
+    def metric_names(self) -> tuple:
+        return ("accuracy", "loss")
+
+
+class LinkPrediction(Task):
+    """Self-supervised link prediction on one (heterogeneous) edge set.
+
+    Positives are the valid edges of ``edge_set_name``; each is scored as
+    a bilinear source/target embedding pair ``(W h_src) . h_tgt``.  For
+    every positive, ``num_negatives`` corrupted targets are drawn
+    host-side from the SAME component's valid target nodes and shipped to
+    the device as the batch's "labels" (an int32 ``[E, K]`` index array —
+    the only host/device contract this task needs).
+
+    Negative-sampling determinism: all draws for the batch at
+    ``(epoch, step)`` come from ``seed_rng(base_seed, ...)`` keyed on
+    (epoch, step) — see `negative_rng`.  Because the batch content at a
+    given (epoch, step) is itself bit-identical across samplers, fleet
+    sizes and `distributed_sample` shard counts, the negatives inherit
+    exactly that invariance (property-tested in
+    tests/test_task_property.py).
+    """
+
+    def __init__(self, edge_set_name: str, hidden_dim: int, *,
+                 num_negatives: int = 4, base_seed: int = 0):
+        if num_negatives < 1:
+            raise ValueError(f"num_negatives must be >= 1, "
+                             f"got {num_negatives}")
+        self.edge_set_name = edge_set_name
+        self.hidden_dim = hidden_dim
+        self.num_negatives = num_negatives
+        self.base_seed = base_seed
+
+    def head(self) -> Module:
+        # the bilinear scorer weight W
+        return Linear(self.hidden_dim, self.hidden_dim, use_bias=False)
+
+    # -- negative sampling (host) -------------------------------------------
+
+    def negative_rng(self, epoch: int, step: int) -> np.random.Generator:
+        """The single owner of the negative-sampling seed derivation:
+        one generator per (base_seed, epoch, step), through the repo-wide
+        `seed_rng` convention.  Invariant to worker/shard/fleet topology
+        because it depends on nothing else."""
+        return seed_rng(self.base_seed, (epoch << 32) | step)
+
+    def _negatives_row(self, rng: np.random.Generator, sizes: np.ndarray,
+                       tgt_sizes: np.ndarray, tgt_cap: int) -> np.ndarray:
+        """[E, K] negative target indices for one scalar graph: each edge
+        slot draws from its own component's valid target-node range, so a
+        negative can never cross components (or land on a padding row of
+        a real component)."""
+        capacity = int(sizes.sum())  # padded edge sizes sum to capacity
+        comp = np.repeat(np.arange(len(sizes)), sizes)  # [E] component ids
+        node_starts = np.concatenate([[0], np.cumsum(tgt_sizes)[:-1]])
+        lo = node_starts[comp]                            # [E]
+        span = np.maximum(tgt_sizes[comp], 1)             # [E]
+        draws = rng.random((capacity, self.num_negatives))
+        idx = lo[:, None] + (draws * span[:, None]).astype(np.int64)
+        # a component with 0 target nodes (possible only at weight 0) has
+        # no range to draw from — clamp in-bounds, the loss masks it out
+        return np.minimum(idx, max(tgt_cap - 1, 0)).astype(np.int32)
+
+    def labels(self, graph: GraphTensor, *, epoch: int = 0,
+               step: int = 0) -> np.ndarray:
+        es = graph.edge_sets[self.edge_set_name]
+        tgt = graph.node_sets[es.adjacency.target_name]
+        sizes = np.asarray(es.sizes)
+        tgt_sizes = np.asarray(tgt.sizes)
+        rng = self.negative_rng(epoch, step)
+        if sizes.ndim == 1:  # scalar batch
+            return self._negatives_row(rng, sizes, tgt_sizes, tgt.capacity)
+        # stacked super-batch: rows drawn in order from the ONE generator
+        return np.stack([self._negatives_row(rng, sizes[r], tgt_sizes[r],
+                                             tgt.capacity)
+                         for r in range(sizes.shape[0])])
+
+    # -- scoring (device) ----------------------------------------------------
+
+    def _scores(self, head_params, graph: GraphTensor, negatives):
+        es = graph.edge_sets[self.edge_set_name]
+        src_states = graph.node_sets[es.adjacency.source_name][HIDDEN_STATE]
+        tgt_states = graph.node_sets[es.adjacency.target_name][HIDDEN_STATE]
+        proj = Linear(self.hidden_dim, self.hidden_dim, use_bias=False)(
+            head_params, src_states)
+        src = jnp.take(proj, es.adjacency.source, axis=0)        # [E, D]
+        pos = (src * jnp.take(tgt_states, es.adjacency.target,
+                              axis=0)).sum(-1)                   # [E]
+        neg = (src[:, None, :]
+               * jnp.take(tgt_states, negatives, axis=0)).sum(-1)  # [E, K]
+        # per-edge weight: the owning component's context weight (0 for
+        # every edge of the padding component)
+        w = jnp.take(_context_weights(graph), es.component_ids())
+        return pos, neg, w
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        """Legacy surface: positive-pair logits only."""
+        es = graph.edge_sets[self.edge_set_name]
+        src_states = graph.node_sets[es.adjacency.source_name][HIDDEN_STATE]
+        tgt_states = graph.node_sets[es.adjacency.target_name][HIDDEN_STATE]
+        proj = Linear(self.hidden_dim, self.hidden_dim, use_bias=False)(
+            head_params, src_states)
+        return (jnp.take(proj, es.adjacency.source, axis=0)
+                * jnp.take(tgt_states, es.adjacency.target, axis=0)).sum(-1)
+
+    def loss_from_graph(self, head_params, graph: GraphTensor,
+                        labels) -> jnp.ndarray:
+        pos, neg, w = self._scores(head_params, graph, labels)
+        # BCE: positives at label 1, negatives at label 0; the K negative
+        # terms per edge average to one vote, so pos/neg are balanced
+        pos_nll = (jax.nn.softplus(-pos) * w).sum()
+        neg_nll = (jax.nn.softplus(neg) * w[:, None]).sum() \
+            / self.num_negatives
+        return (pos_nll + neg_nll) / jnp.maximum(2.0 * w.sum(), 1.0)
+
+    def metrics(self, head_params, graph: GraphTensor, labels) -> dict:
+        pos, neg, w = self._scores(head_params, graph, labels)
+        den = 2.0 * w.sum()
+        correct = (((pos > 0) * w).sum()
+                   + ((neg <= 0) * w[:, None]).sum() / self.num_negatives)
+        pos_nll = (jax.nn.softplus(-pos) * w).sum()
+        neg_nll = (jax.nn.softplus(neg) * w[:, None]).sum() \
+            / self.num_negatives
+        return {"accuracy": (correct, den),
+                "loss": (pos_nll + neg_nll, den)}
+
+    def metric_names(self) -> tuple:
+        return ("accuracy", "loss")
+
+
+class DeepGraphInfomax(Task):
+    """Self-supervised DGI objective (paper §5 Task list): discriminate
+    node states of the real graph vs a feature-shuffled corruption against
+    a per-component summary vector (Velickovic et al. 2019)."""
+
+    def __init__(self, node_set_name: str, hidden_dim: int):
+        self.node_set_name = node_set_name
+        self.hidden_dim = hidden_dim
+
+    def head(self) -> Module:
+        # bilinear discriminator weight
+        return Linear(self.hidden_dim, self.hidden_dim, use_bias=False)
+
+    def logits_for(self, head_params, graph: GraphTensor,
+                   states: jnp.ndarray) -> jnp.ndarray:
+        summary = ops.pool_nodes_to_context(
+            graph, self.node_set_name, "mean", feature_value=states)
+        summary = jnp.tanh(summary)
+        proj = Linear(self.hidden_dim, self.hidden_dim, use_bias=False)(
+            head_params, states)
+        per_node_summary = ops.broadcast_context_to_nodes(
+            graph, self.node_set_name, feature_value=summary)
+        return (proj * per_node_summary).sum(-1)
+
+    def predict(self, head_params, graph: GraphTensor) -> jnp.ndarray:
+        ns = graph.node_sets[self.node_set_name]
+        return self.logits_for(head_params, graph, ns[HIDDEN_STATE])
+
+    def corrupt(self, graph: GraphTensor, rng) -> GraphTensor:
+        """Corruption: permute node features within the set."""
+        ns = graph.node_sets[self.node_set_name]
+        perm = jax.random.permutation(rng, ns.capacity)
+        feats = {k: jnp.take(v, perm, axis=0)
+                 for k, v in ns.features.items()}
+        return graph.replace_features(node_sets={self.node_set_name: feats})
+
+    def loss(self, logits, labels, weights):
+        # labels: 1 real / 0 corrupted per node; weights: node validity
+        nll = jax.nn.softplus(logits) - logits * labels
+        return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)

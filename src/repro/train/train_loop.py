@@ -255,3 +255,52 @@ def make_eval_step(model, cfg: ArchConfig) -> Callable:
         return metrics
 
     return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Graph train/eval steps (the Trainer's step factories)
+# ---------------------------------------------------------------------------
+
+def make_graph_train_step(loss_fn: Callable, optimizer, *,
+                          plan=None, num_groups: int | None = None
+                          ) -> Callable:
+    """(params, opt_state, graph, labels) -> (params, opt_state, loss).
+
+    ``loss_fn(params, scalar_graph, labels) -> scalar``.  Without a plan:
+    a plain jit'd value_and_grad + optimizer update (identical XLA program
+    to the seed runner's inline step).  With a
+    `repro.distributed.partition.MeshPlan`: delegates to
+    ``partition.make_train_step`` (per-shard forward/backward over the 2-D
+    mesh, gradient pmean, ZeRO-1 update) — ``num_groups`` is the
+    super-batch stack size, required there.
+    """
+    if plan is not None:
+        from repro.distributed import partition
+        if num_groups is None:
+            raise ValueError("make_graph_train_step with plan= needs "
+                             "num_groups= (the super-batch stack size)")
+        return partition.make_train_step(plan, loss_fn, optimizer,
+                                         num_groups=num_groups)
+
+    @jax.jit
+    def train_step(params, opt_state, graph, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, graph, labels)
+        params, opt_state, _ = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_graph_eval_step(metric_fn: Callable, *, plan=None) -> Callable:
+    """(params, graph, labels) -> tuple of metric scalars.
+
+    ``metric_fn(params, scalar_graph, labels)`` must return a TUPLE of
+    scalars that are exact sums (numerators/denominators, not means) —
+    with a plan they are summed over component groups and psum'd over
+    data shards by ``partition.make_eval_step``, so only sums aggregate
+    correctly across shardings.
+    """
+    if plan is not None:
+        from repro.distributed import partition
+        return partition.make_eval_step(plan, metric_fn)
+    return jax.jit(metric_fn)

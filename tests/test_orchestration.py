@@ -1,0 +1,508 @@
+"""Orchestration layer: the Task/Trainer/DatasetProvider protocols.
+
+Covers the provider stream contract (BatcherProvider == StoreProvider ==
+mmap-backed StoreProvider, bit-identical; ServiceProvider passthrough),
+Trainer.fit parity with the runner.run shim, eval-stream determinism and
+batch-boundary independence, EarlyStopping semantics, best-checkpoint
+retention under keep= GC, in-process checkpoint resume, and the two new
+tasks training end-to-end."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HIDDEN_STATE, mag_schema
+from repro.core.models import vanilla_mpnn
+from repro.data import (GraphBatcher, InMemorySampler, SamplingSpecBuilder,
+                        find_size_constraints)
+from repro.data.synthetic import (synthetic_graph_classification,
+                                  synthetic_mag)
+from repro.distributed.fault_tolerance import (CheckpointManager,
+                                               best_checkpoint,
+                                               latest_checkpoint)
+from repro.nn.layers import Embedding, Linear
+from repro.nn.module import Module
+from repro.orchestration import (BatcherProvider, EarlyStopping,
+                                 GraphMulticlassClassification,
+                                 IteratorProvider, LinkPrediction,
+                                 RootNodeMulticlassClassification,
+                                 ServiceProvider, StoreProvider, Trainer,
+                                 evaluate, run)
+
+DIM = 16
+
+
+def _leaves(g):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(g)]
+
+
+def assert_graphs_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.fixture(scope="module")
+def mag_problem():
+    """Small MAG problem: store, cites-only spec, 48 pre-sampled roots."""
+    store, _ = synthetic_mag(n_papers=64, n_authors=32, n_institutions=5,
+                             n_fields=10, n_classes=4, feat_dim=16)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    seed_op.sample(4, "cites")
+    spec = seed_op.build()
+    roots = list(range(48))
+    graphs = InMemorySampler(store, spec, seed=0).sample(roots)
+    sizes = find_size_constraints(graphs, 8)
+    return store, spec, roots, graphs, sizes
+
+
+def mag_model():
+    class Init(Module):
+        def __init__(self):
+            self.lin = Linear(16, DIM)
+
+        def init(self, key):
+            return {"lin": self.lin.init(key)}
+
+        def __call__(self, params, graph):
+            return graph.replace_features(node_sets={
+                "paper": {HIDDEN_STATE: jax.nn.relu(self.lin(
+                    params["lin"], graph.node_sets["paper"]["feat"]))}})
+
+    gnn = vanilla_mpnn({"cites": ("paper", "paper")}, {"paper": DIM},
+                       message_dim=DIM, hidden_dim=DIM, num_rounds=1)
+    return lambda: (Init(), gnn)
+
+
+@pytest.fixture(scope="module")
+def gc_problem():
+    """MUTAG-shaped graph classification set + provider factory."""
+    graphs = synthetic_graph_classification(num_graphs=64, num_classes=2,
+                                            feat_dim=8, seed=0)
+    sizes = find_size_constraints(graphs, 8)
+    return graphs, sizes
+
+
+def gc_model():
+    class Init(Module):
+        def __init__(self):
+            self.lin = Linear(8, DIM)
+
+        def init(self, key):
+            return {"lin": self.lin.init(key)}
+
+        def __call__(self, params, graph):
+            return graph.replace_features(node_sets={
+                "atoms": {HIDDEN_STATE: jax.nn.relu(self.lin(
+                    params["lin"], graph.node_sets["atoms"]["feat"]))}})
+
+    gnn = vanilla_mpnn({"bonds": ("atoms", "atoms")}, {"atoms": DIM},
+                       message_dim=DIM, hidden_dim=DIM, num_rounds=2)
+    return lambda: (Init(), gnn)
+
+
+# ---------------------------------------------------------------------------
+# provider stream contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_replicas", [None, 2])
+def test_store_provider_matches_batcher_provider(mag_problem, num_replicas):
+    """StoreProvider samples on demand but its stream is bit-identical to
+    a BatcherProvider over InMemorySampler.sample(roots)."""
+    store, spec, roots, graphs, sizes = mag_problem
+    sp = StoreProvider(store, spec, roots, batch_size=8, sizes=sizes,
+                       seed=0, num_replicas=num_replicas, base_seed=0)
+    bp = BatcherProvider(graphs, 8, sizes, seed=0,
+                         num_replicas=num_replicas)
+    assert sp.num_steps == bp.num_steps
+    for epoch in (0, 1):
+        got = list(sp.epoch(epoch))
+        want = list(bp.epoch(epoch))
+        assert len(got) == len(want) == sp.num_steps
+        for g, w in zip(got, want):
+            assert_graphs_equal(g, w)
+    # resume entry: start_step skips exactly
+    tail = list(sp.epoch(1, start_step=2))
+    full = list(bp.epoch(1))
+    assert len(tail) == len(full) - 2
+    for g, w in zip(tail, full[2:]):
+        assert_graphs_equal(g, w)
+
+
+def test_store_provider_mmap_backend(mag_problem, tmp_path):
+    """The same provider fronts an out-of-core MmapGraphStore and yields
+    the identical stream."""
+    from repro.storage import MmapGraphStore, write_graph
+    store, spec, roots, graphs, sizes = mag_problem
+    path = write_graph(store, str(tmp_path / "g"))
+    mmap_store = MmapGraphStore(path)
+    sp_mem = StoreProvider(store, spec, roots, batch_size=8, sizes=sizes,
+                           seed=0, base_seed=0)
+    sp_mmap = StoreProvider(mmap_store, spec, roots, batch_size=8,
+                            sizes=sizes, seed=0, base_seed=0)
+    for g, w in zip(sp_mmap.epoch(0), sp_mem.epoch(0)):
+        assert_graphs_equal(g, w)
+
+
+def test_service_provider_wraps_service(mag_problem):
+    from repro.sampling_service import SamplingService
+    store, spec, roots, graphs, sizes = mag_problem
+    task = RootNodeMulticlassClassification("paper", 4, DIM)
+    bp = BatcherProvider(graphs, 8, sizes, seed=0)
+    with SamplingService(store, spec, roots, batch_size=8, sizes=sizes,
+                         num_workers=1, seed=0, base_seed=0) as svc:
+        provider = ServiceProvider(svc, label_fn=lambda g: task.labels(g))
+        # layout bit comes from the producer's plan
+        assert provider.edges_sorted_by_target is True
+        assert provider.num_steps == bp.num_steps
+        got = list(provider.epoch(0))
+        want = list(bp.epoch(0))
+        assert len(got) == len(want)
+        for (g, lab), w in zip(got, want):
+            assert_graphs_equal(g, w)
+            np.testing.assert_array_equal(lab, task.labels(w))
+        # own=False (default): provider.close() leaves the service up
+        provider.close()
+        assert next(iter(svc.epoch(0))) is not None
+        # without label_fn the stream yields bare graphs
+        bare = next(iter(ServiceProvider(svc).epoch(0)))
+        assert not isinstance(bare, tuple)
+
+
+def test_iterator_provider_contract():
+    provider = IteratorProvider(lambda epoch: iter(range(10 * (epoch + 1),
+                                                        10 * (epoch + 1)
+                                                        + 5)))
+    with pytest.raises(ValueError, match="num_steps"):
+        provider.num_steps
+    assert list(provider.epoch(0)) == [10, 11, 12, 13, 14]
+    assert list(provider.epoch(1, start_step=3)) == [23, 24]
+    sized = IteratorProvider(lambda epoch: iter([]), num_steps=7)
+    assert sized.num_steps == 7
+
+
+# ---------------------------------------------------------------------------
+# Trainer.fit == runner.run shim (bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def test_trainer_direct_matches_runner_shim(mag_problem):
+    """Building Task + DatasetProvider + Trainer directly reproduces the
+    exact loss of the legacy runner.run kwargs path (which pre-computes
+    labels host-side instead of going through Task.labels)."""
+    store, spec, roots, graphs, sizes = mag_problem
+    task = RootNodeMulticlassClassification("paper", 4, DIM)
+
+    def gen(epoch):
+        batcher = GraphBatcher(graphs, 8, sizes, seed=0)
+        for graph in batcher.epoch(epoch):
+            yield graph, task.labels(graph)
+
+    shim = run(train_batches=gen, model_fn=mag_model(), task=task,
+               epochs=1, learning_rate=1e-2, total_steps=50,
+               log_every=10 ** 9, max_steps=4)
+    trainer = Trainer(epochs=1, learning_rate=1e-2, total_steps=50,
+                      log_every=10 ** 9, max_steps=4)
+    direct = trainer.fit(mag_model(), task,
+                         BatcherProvider(graphs, 8, sizes, seed=0))
+    assert shim.step == direct.step == 4
+    assert shim.train_loss == direct.train_loss
+
+
+def test_trainer_model_parallel_needs_devices():
+    trainer = Trainer(model_parallel=2)
+    with pytest.raises(ValueError, match="num_devices"):
+        trainer.fit(gc_model(),
+                    GraphMulticlassClassification("atoms", 2, DIM),
+                    IteratorProvider(lambda e: iter([])))
+
+
+def test_metric_names_mismatch_raises(gc_problem):
+    graphs, sizes = gc_problem
+
+    class Broken(GraphMulticlassClassification):
+        def metric_names(self):
+            return ("loss",)  # but metrics() produces accuracy too
+
+    trainer = Trainer(epochs=1, max_steps=1, log_every=10 ** 9,
+                      eval_at="end")
+    with pytest.raises(ValueError, match="metric_names"):
+        trainer.fit(gc_model(), Broken("atoms", 2, DIM),
+                    BatcherProvider(graphs[:32], 8, sizes, seed=0),
+                    eval_provider=BatcherProvider(graphs[32:], 8, sizes,
+                                                  seed=0))
+
+
+# ---------------------------------------------------------------------------
+# eval streams
+# ---------------------------------------------------------------------------
+
+def _eval_closure(model_fn, task, params):
+    from repro.train.train_loop import make_graph_eval_step
+    init_states, gnn = model_fn()
+    keys = tuple(task.metric_names())
+
+    def metric_fn(params, graph, labels):
+        graph_out = gnn(params["gnn"], init_states(params["init"], graph))
+        pairs = task.metrics(params["head"], graph_out, labels)
+        flat = []
+        for k in keys:
+            num, den = pairs[k]
+            flat += [num, den]
+        return tuple(flat)
+
+    step = make_graph_eval_step(metric_fn)
+    place = (lambda g, l: (jax.tree_util.tree_map(jnp.asarray, g),
+                           jnp.asarray(l)))
+    return (lambda g, l: step(params, g, l)), place, keys
+
+
+def test_eval_stream_deterministic_and_batch_invariant(gc_problem):
+    """Two passes over the same provider yield identical metrics, and —
+    because evaluate accumulates exact (num, den) pairs, dividing once —
+    the result is independent of batch boundaries."""
+    graphs, sizes = gc_problem
+    task = GraphMulticlassClassification("atoms", 2, DIM)
+    model_fn = gc_model()
+    init_states, gnn = model_fn()
+    trainer = Trainer()
+    params = trainer._init_params(init_states, gnn, task.head())
+    eval_step, place, keys = _eval_closure(model_fn, task, params)
+
+    bp8 = BatcherProvider(graphs, 8, sizes, seed=0)
+    m1 = evaluate(bp8, task, eval_step, place, metric_keys=keys)
+    m2 = evaluate(bp8, task, eval_step, place, metric_keys=keys)
+    assert set(m1) == {"accuracy", "loss"}
+    assert m1 == m2  # exact — same floats, not approximately
+
+    sizes16 = find_size_constraints(graphs, 16)
+    eval16, place16, _ = _eval_closure(model_fn, task, params)
+    m3 = evaluate(BatcherProvider(graphs, 16, sizes16, seed=0), task,
+                  eval16, place16, metric_keys=keys)
+    for k in keys:
+        assert abs(m1[k] - m3[k]) < 1e-5, (k, m1, m3)
+
+
+# ---------------------------------------------------------------------------
+# early stopping
+# ---------------------------------------------------------------------------
+
+def test_early_stopping_patience_min():
+    es = EarlyStopping(monitor="loss", patience=2, mode="min")
+    assert es.update(1.0, step=10) and not es.should_stop
+    assert es.update(0.9, step=20) and not es.should_stop
+    assert not es.update(0.95, step=30) and not es.should_stop
+    assert not es.update(0.94, step=40)
+    assert es.should_stop
+    assert (es.best, es.best_step) == (0.9, 20)
+
+
+def test_early_stopping_improvement_resets_patience():
+    es = EarlyStopping(patience=2, mode="min")
+    es.update(1.0, step=1)
+    es.update(1.1, step=2)
+    assert es.bad_evals == 1
+    es.update(0.8, step=3)  # improvement resets the counter
+    assert es.bad_evals == 0 and not es.should_stop
+
+
+def test_early_stopping_min_delta_gates_stop_not_best():
+    """An improvement below min_delta still updates best (Keras
+    semantics: min_delta gates stopping, not best-checkpoint tracking)."""
+    es = EarlyStopping(patience=1, min_delta=0.1, mode="min")
+    assert es.update(1.0, step=1)
+    assert es.update(0.95, step=2)  # new best...
+    assert es.best == 0.95 and es.best_step == 2
+    assert es.bad_evals == 1  # ...but not a significant improvement
+    assert es.should_stop
+
+
+def test_early_stopping_mode_max():
+    es = EarlyStopping(monitor="accuracy", patience=2, mode="max")
+    assert es.update(0.5, step=1)
+    assert es.update(0.7, step=2)
+    assert not es.update(0.6, step=3)
+    assert es.best == 0.7 and not es.should_stop
+
+
+def test_early_stopping_validates():
+    with pytest.raises(ValueError, match="mode"):
+        EarlyStopping(mode="sideways")
+    with pytest.raises(ValueError, match="patience"):
+        EarlyStopping(patience=0)
+
+
+# ---------------------------------------------------------------------------
+# best-checkpoint retention
+# ---------------------------------------------------------------------------
+
+def test_mark_best_survives_gc(tmp_path):
+    """The best-pointed checkpoint is pinned: keep= GC never collects it,
+    however old it gets."""
+    state = {"w": np.ones(4, np.float32)}
+    with CheckpointManager(str(tmp_path), keep=2) as mgr:
+        mgr.save_async(10, {"w": state["w"] * 10})
+        mgr.wait()
+        mgr.mark_best(10)
+        for step in (20, 30, 40):
+            mgr.save_async(step, {"w": state["w"] * step})
+        mgr.wait()
+        names = sorted(d for d in os.listdir(tmp_path)
+                       if d.startswith("step_"))
+        assert names == ["step_0000000010", "step_0000000030",
+                         "step_0000000040"]
+        assert latest_checkpoint(str(tmp_path)).endswith("step_0000000040")
+        assert best_checkpoint(str(tmp_path)).endswith("step_0000000010")
+        step, restored, _ = mgr.restore_best(state)
+        assert step == 10
+        np.testing.assert_array_equal(restored["w"], state["w"] * 10)
+
+
+def test_mark_best_requires_saved_step(tmp_path):
+    with CheckpointManager(str(tmp_path), keep=2) as mgr:
+        with pytest.raises(FileNotFoundError, match="wait"):
+            mgr.mark_best(99)
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: eval placement, early stopping, resume, new tasks
+# ---------------------------------------------------------------------------
+
+def test_trainer_epoch_eval_early_stops_and_tracks_best(gc_problem,
+                                                        tmp_path):
+    """eval_at='epoch' + an impossible min_delta: exactly two evals run
+    (patience=1), the run stops early, and the best eval's step survives
+    as the `best` checkpoint."""
+    graphs, sizes = gc_problem
+    ckpt = str(tmp_path / "ck")
+    trainer = Trainer(
+        epochs=5, learning_rate=3e-3, total_steps=100, log_every=10 ** 9,
+        ckpt_dir=ckpt, save_interval_steps=3, eval_at="epoch",
+        early_stopping=EarlyStopping(monitor="loss", patience=1,
+                                     min_delta=100.0, mode="min"))
+    provider = BatcherProvider(graphs[:48], 8, sizes, seed=0)
+    result = trainer.fit(gc_model(),
+                         GraphMulticlassClassification("atoms", 2, DIM),
+                         provider,
+                         eval_provider=BatcherProvider(graphs[48:], 8,
+                                                       sizes, seed=0))
+    assert result.metrics["stopped_early"] is True
+    assert len(result.metrics["eval_history"]) == 2
+    assert result.step == 2 * provider.num_steps
+    # min_delta gates patience, not best tracking: best = argmin eval loss
+    history = result.metrics["eval_history"]
+    want_best = (int(np.argmin([m["loss"] for m in history])) + 1) \
+        * provider.num_steps
+    assert result.metrics["best_step"] == want_best
+    assert result.metrics["best_value"] == min(m["loss"] for m in history)
+    best = best_checkpoint(ckpt)
+    assert best is not None and best.endswith(
+        f"step_{result.metrics['best_step']:010d}")
+
+
+def test_trainer_disabled_early_stopping_runs_all_epochs(gc_problem):
+    graphs, sizes = gc_problem
+    provider = BatcherProvider(graphs[:48], 8, sizes, seed=0)
+    trainer = Trainer(epochs=3, learning_rate=3e-3, total_steps=100,
+                      log_every=10 ** 9, eval_at="end")
+    result = trainer.fit(gc_model(),
+                         GraphMulticlassClassification("atoms", 2, DIM),
+                         provider,
+                         eval_provider=BatcherProvider(graphs[48:], 8,
+                                                       sizes, seed=0))
+    assert result.step == 3 * provider.num_steps
+    assert "stopped_early" not in result.metrics
+    assert set(result.metrics["eval"]) == {"accuracy", "loss"}
+
+
+def test_trainer_resume_matches_uninterrupted(gc_problem, tmp_path):
+    """Stop mid-epoch-2 via max_steps, resume=True from the final
+    checkpoint: the completed run's final (step, loss) equals the
+    uninterrupted run's exactly."""
+    graphs, sizes = gc_problem
+    task = GraphMulticlassClassification("atoms", 2, DIM)
+    provider = BatcherProvider(graphs, 8, sizes, seed=0)
+    config = dict(epochs=2, learning_rate=3e-3, total_steps=100,
+                  log_every=10 ** 9, save_interval_steps=2)
+
+    full = Trainer(ckpt_dir=str(tmp_path / "a"), **config).fit(
+        gc_model(), task, provider)
+    assert full.step == 2 * provider.num_steps
+
+    cut = provider.num_steps + 1  # one step into epoch 1
+    part = Trainer(ckpt_dir=str(tmp_path / "b"), max_steps=cut,
+                   **config).fit(gc_model(), task, provider)
+    assert part.step == cut
+    resumed = Trainer(ckpt_dir=str(tmp_path / "b"), resume=True,
+                      **config).fit(gc_model(), task, provider)
+    assert resumed.step == full.step
+    assert resumed.train_loss == full.train_loss
+
+
+def test_graph_classification_trains(gc_problem):
+    graphs, sizes = gc_problem
+    trainer = Trainer(epochs=1, learning_rate=3e-3, total_steps=50,
+                      log_every=10 ** 9, max_steps=3, eval_at="end")
+    result = trainer.fit(gc_model(),
+                         GraphMulticlassClassification("atoms", 2, DIM),
+                         BatcherProvider(graphs[:48], 8, sizes, seed=0),
+                         eval_provider=BatcherProvider(graphs[48:], 8,
+                                                       sizes, seed=0))
+    assert result.step == 3 and np.isfinite(result.train_loss)
+    em = result.metrics["eval"]
+    assert 0.0 <= em["accuracy"] <= 1.0 and np.isfinite(em["loss"])
+
+
+def test_link_prediction_trains(mag_problem):
+    """LinkPrediction on the heterogeneous writes edge set trains through
+    the StoreProvider (sample-on-demand) path."""
+    store, _, _, _, _ = mag_problem
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    cited = seed_op.sample(4, "cites")
+    authors = cited.join([seed_op]).sample(2, "written")
+    authors.sample(2, "writes")
+    spec = seed_op.build()
+    roots = np.arange(32)
+    graphs = InMemorySampler(store, spec, seed=0).sample(roots)
+    sizes = find_size_constraints(graphs, 8)
+
+    class Init(Module):
+        def __init__(self):
+            self.paper = Linear(16, DIM)
+            self.author = Embedding(64, DIM)
+
+        def init(self, key):
+            k1, k2 = jax.random.split(key)
+            return {"paper": self.paper.init(k1),
+                    "author": self.author.init(k2)}
+
+        def __call__(self, params, graph):
+            ids = graph.node_sets["author"]["id"] % 64
+            return graph.replace_features(node_sets={
+                "paper": {HIDDEN_STATE: jax.nn.relu(self.paper(
+                    params["paper"], graph.node_sets["paper"]["feat"]))},
+                "author": {HIDDEN_STATE: self.author(
+                    params["author"], ids, dtype=jnp.float32)}})
+
+    gnn = vanilla_mpnn({"cites": ("paper", "paper"),
+                        "written": ("paper", "author"),
+                        "writes": ("author", "paper")},
+                       {"paper": DIM, "author": DIM}, message_dim=DIM,
+                       hidden_dim=DIM, num_rounds=1)
+    task = LinkPrediction("writes", DIM, num_negatives=2, base_seed=0)
+    provider = StoreProvider(store, spec, roots, batch_size=8, sizes=sizes,
+                             seed=0, base_seed=0)
+    trainer = Trainer(epochs=1, learning_rate=3e-3, total_steps=50,
+                      log_every=10 ** 9, max_steps=3, eval_at="end")
+    result = trainer.fit(lambda: (Init(), gnn), task, provider,
+                         eval_provider=StoreProvider(
+                             store, spec, np.arange(32, 48), batch_size=8,
+                             sizes=sizes, seed=0, base_seed=0))
+    assert result.step == 3 and np.isfinite(result.train_loss)
+    em = result.metrics["eval"]
+    assert set(em) == {"accuracy", "loss"}
+    assert 0.0 <= em["accuracy"] <= 1.0

@@ -1,0 +1,42 @@
+"""The runner.run compatibility shim reproduces the seed training path.
+
+Runs examples/ogbn_mag_train.py — which still goes through the legacy
+`runner.run(...)` kwargs, now a thin shim over
+Task/Trainer/DatasetProvider — in four configurations (1 device,
+8 devices, 8 devices + model_parallel=2, 8 devices + sampler=service)
+as real subprocesses (device count is fixed at jax import), and pins all
+four "final loss" prints equal to 4 decimals.  Classification losses are
+device-count invariant here because every component group carries the
+same weight (see repro.distributed.partition's mean-of-group-means)."""
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+EXAMPLE = os.path.join("examples", "ogbn_mag_train.py")
+ARGS = ["--papers", "160", "--steps", "2", "--hidden", "32"]
+
+
+def _run_example(extra, num_devices):
+    env = dict(os.environ, PYTHONPATH=os.path.abspath("src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                         f"{num_devices}")
+    res = subprocess.run([sys.executable, EXAMPLE] + ARGS + extra,
+                         env=env, capture_output=True, text=True,
+                         timeout=540, cwd=os.getcwd())
+    assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-2000:])
+    m = re.search(r"final loss (\d+\.\d{4})", res.stdout)
+    assert m, res.stdout[-2000:]
+    return m.group(1)  # the 4-decimal string itself
+
+
+@pytest.mark.timeout(1800)
+def test_shim_loss_parity_across_configs():
+    one = _run_example(["--num-devices", "1"], 1)
+    eight = _run_example(["--num-devices", "8"], 8)
+    mp2 = _run_example(["--num-devices", "8", "--model-parallel", "2"], 8)
+    service = _run_example(["--num-devices", "8", "--sampler", "service",
+                            "--sampler-workers", "2"], 8)
+    assert one == eight == mp2 == service, (one, eight, mp2, service)

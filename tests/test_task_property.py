@@ -1,0 +1,222 @@
+"""Property tests for Task label extraction — above all the
+LinkPrediction negative sampler's determinism contract: every draw comes
+from `seed_rng(base_seed, (epoch << 32) | step)` and nothing else, so
+negatives are a pure function of (batch content, epoch, step) and inherit
+the stream's invariance to sampler kind, fleet size and shard count.
+
+The shape-space properties run twice: always as a seeded deterministic
+sweep (so CI covers them with no optional deps), and — when `hypothesis`
+is installed — as fuzzed `@given` tests over the same strategy space."""
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # optional dep: the seeded sweeps below still run
+    hypothesis = None
+
+import numpy as np
+
+from repro.core.schema import mag_schema
+from repro.data import (InMemorySampler, SamplingSpecBuilder,
+                        find_size_constraints)
+from repro.data.synthetic import synthetic_mag
+from repro.orchestration import (LinkPrediction,
+                                 RootNodeMulticlassClassification,
+                                 StoreProvider)
+
+
+# ---------------------------------------------------------------------------
+# the properties, over concrete shapes
+# ---------------------------------------------------------------------------
+
+def check_negatives_in_bounds_and_in_component(edge_sizes, tgt_sizes,
+                                               tgt_cap, base_seed, epoch,
+                                               step, num_negatives):
+    task = LinkPrediction("e", 4, num_negatives=num_negatives,
+                          base_seed=base_seed)
+    neg = task._negatives_row(task.negative_rng(epoch, step), edge_sizes,
+                              tgt_sizes, tgt_cap)
+    capacity = int(edge_sizes.sum())
+    assert neg.shape == (capacity, num_negatives)
+    assert neg.dtype == np.int32
+    if tgt_cap:
+        assert (neg >= 0).all() and (neg < tgt_cap).all()
+    # each edge's negatives stay inside its own component's target range
+    # (components with zero target nodes only clamp, loss-masked anyway)
+    starts = np.concatenate([[0], np.cumsum(tgt_sizes)[:-1]])
+    comp = np.repeat(np.arange(len(edge_sizes)), edge_sizes)
+    for e in range(capacity):
+        c = comp[e]
+        if tgt_sizes[c] > 0:
+            lo, hi = starts[c], starts[c] + tgt_sizes[c]
+            assert (neg[e] >= lo).all() and (neg[e] < hi).all()
+
+
+def check_negatives_pure_in_seed_epoch_step(edge_sizes, tgt_sizes,
+                                            tgt_cap, base_seed, epoch,
+                                            step, num_negatives):
+    task = LinkPrediction("e", 4, num_negatives=num_negatives,
+                          base_seed=base_seed)
+    again = LinkPrediction("e", 4, num_negatives=num_negatives,
+                           base_seed=base_seed)
+    a = task._negatives_row(task.negative_rng(epoch, step), edge_sizes,
+                            tgt_sizes, tgt_cap)
+    b = again._negatives_row(again.negative_rng(epoch, step), edge_sizes,
+                             tgt_sizes, tgt_cap)
+    np.testing.assert_array_equal(a, b)
+    # a different (epoch, step) is an independent stream — with a real
+    # drawing range the draws differ (a tie is vanishingly unlikely)
+    wide_e = np.full(8, 4, np.int32)
+    wide_t = np.full(8, 6, np.int32)
+    c = task._negatives_row(task.negative_rng(epoch, step + 1), wide_e,
+                            wide_t, 48)
+    d = task._negatives_row(task.negative_rng(epoch, step), wide_e,
+                            wide_t, 48)
+    assert not np.array_equal(c, d)
+
+
+def _sweep_shape(rng):
+    n_comp = int(rng.integers(1, 5))
+    edge_sizes = rng.integers(0, 6, n_comp).astype(np.int32)
+    tgt_sizes = rng.integers(0, 7, n_comp).astype(np.int32)
+    tgt_cap = int(tgt_sizes.sum()) + int(rng.integers(0, 4))
+    return (edge_sizes, tgt_sizes, tgt_cap, int(rng.integers(2 ** 20)),
+            int(rng.integers(4)), int(rng.integers(2 ** 16)),
+            int(rng.integers(1, 6)))
+
+
+@pytest.mark.parametrize("case", range(40))
+def test_negatives_in_bounds_sweep(case):
+    rng = np.random.default_rng(case)
+    check_negatives_in_bounds_and_in_component(*_sweep_shape(rng))
+
+
+@pytest.mark.parametrize("case", range(15))
+def test_negatives_pure_sweep(case):
+    rng = np.random.default_rng(1000 + case)
+    check_negatives_pure_in_seed_epoch_step(*_sweep_shape(rng))
+
+
+def test_epoch_step_seed_derivation_collision_free():
+    """(epoch << 32) | step keys distinct generators per coordinate."""
+    task = LinkPrediction("e", 4, base_seed=7)
+    for epoch, step in [(0, 0), (0, 7), (2, 31), (3, 2 ** 16)]:
+        here = task.negative_rng(epoch, step).integers(0, 2 ** 31, 4)
+        for e2, s2 in [(epoch, step + 1), (epoch + 1, step)]:
+            other = task.negative_rng(e2, s2).integers(0, 2 ** 31, 4)
+            assert not np.array_equal(here, other), (epoch, step, e2, s2)
+
+
+if hypothesis is not None:
+    @st.composite
+    def negative_row_shapes(draw):
+        n_comp = draw(st.integers(1, 4))
+        edge_sizes = np.asarray(
+            [draw(st.integers(0, 5)) for _ in range(n_comp)], np.int32)
+        tgt_sizes = np.asarray(
+            [draw(st.integers(0, 6)) for _ in range(n_comp)], np.int32)
+        pad = draw(st.integers(0, 3))
+        return (edge_sizes, tgt_sizes, int(tgt_sizes.sum()) + pad,
+                draw(st.integers(0, 2 ** 20)),   # base_seed
+                draw(st.integers(0, 3)),          # epoch
+                draw(st.integers(0, 2 ** 16)),    # step
+                draw(st.integers(1, 5)))          # num_negatives
+
+    @hypothesis.given(negative_row_shapes())
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_negatives_in_bounds_fuzzed(shapes):
+        check_negatives_in_bounds_and_in_component(*shapes)
+
+    @hypothesis.given(negative_row_shapes())
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_negatives_pure_fuzzed(shapes):
+        check_negatives_pure_in_seed_epoch_step(*shapes)
+
+
+# ---------------------------------------------------------------------------
+# invariance across sampler kind / fleet size / shard count (the stream
+# contract the negative sampler inherits)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lp_problem():
+    store, _ = synthetic_mag(n_papers=64, n_authors=32, n_institutions=5,
+                             n_fields=10, n_classes=4, feat_dim=16)
+    b = SamplingSpecBuilder(mag_schema())
+    seed_op = b.seed("paper")
+    cited = seed_op.sample(4, "cites")
+    authors = cited.join([seed_op]).sample(2, "written")
+    authors.sample(2, "writes")
+    spec = seed_op.build()
+    roots = list(range(32))
+    graphs = InMemorySampler(store, spec, seed=0).sample(roots)
+    sizes = find_size_constraints(graphs, 8)
+    return store, spec, roots, sizes
+
+
+def test_negatives_invariant_to_fleet_size_and_sampler(lp_problem):
+    """The labels (= negative index arrays) for the batch at a given
+    (epoch, step) are identical whether the batch came from the
+    sample-on-demand StoreProvider or a SamplingService with 1 or 3
+    workers."""
+    from repro.sampling_service import SamplingService
+    store, spec, roots, sizes = lp_problem
+    task = LinkPrediction("writes", 16, num_negatives=3, base_seed=0)
+    sp = StoreProvider(store, spec, roots, batch_size=8, sizes=sizes,
+                       seed=0, base_seed=0)
+    want = [task.labels(g, epoch=1, step=s)
+            for s, g in enumerate(sp.epoch(1))]
+    for num_workers in (1, 3):
+        with SamplingService(store, spec, roots, batch_size=8,
+                             sizes=sizes, num_workers=num_workers,
+                             seed=0, base_seed=0,
+                             backend="thread") as svc:
+            got = [task.labels(g, epoch=1, step=s)
+                   for s, g in enumerate(svc.epoch(1))]
+        assert len(got) == len(want)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_negatives_invariant_to_shard_count(lp_problem, tmp_path):
+    """`distributed_sample` persists identical graphs for any shard
+    count, so negatives derived from the reloaded root order match the
+    in-process ones — shard count never reaches the label stream."""
+    from repro.data import distributed_sample, load_graphs
+    from repro.data.sampling import shard_partition
+    store, spec, roots, sizes = lp_problem
+    task = LinkPrediction("writes", 16, num_negatives=3, base_seed=0)
+    direct = InMemorySampler(store, spec, seed=0).sample(roots)
+    want = [task.labels(g, epoch=0, step=s)
+            for s, g in enumerate(direct)]
+    for num_shards in (1, 4):
+        out = tmp_path / f"shards_{num_shards}"
+        paths = distributed_sample(store, spec, roots, str(out),
+                                   num_shards=num_shards, base_seed=0)
+        by_root = {}
+        for shard_roots, p in zip(shard_partition(roots, num_shards),
+                                  paths):
+            for root, g in zip(shard_roots, load_graphs(p)):
+                by_root[int(root)] = g
+        got = [task.labels(by_root[r], epoch=0, step=s)
+               for s, r in enumerate(roots)]
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_root_labels_pure_and_layout_agnostic(lp_problem):
+    """RootNode label extraction is identical on scalar and stacked
+    layouts of the same batch."""
+    from repro.core.graph_tensor import stack_graphs, unstack_graph
+    store, spec, roots, sizes = lp_problem
+    task = RootNodeMulticlassClassification("paper", 4, 16)
+    sp = StoreProvider(store, spec, roots, batch_size=8, sizes=sizes,
+                       seed=0, num_replicas=2, base_seed=0)
+    stacked = next(iter(sp.epoch(0)))
+    lab_stacked = task.labels(stacked)
+    rows = [task.labels(g) for g in unstack_graph(stacked)]
+    np.testing.assert_array_equal(lab_stacked, np.stack(rows))
+    np.testing.assert_array_equal(
+        task.labels(stack_graphs(list(unstack_graph(stacked)))),
+        lab_stacked)
